@@ -1,0 +1,71 @@
+"""Shared benchmark utilities: datasets, workloads, timing, FPR measurement.
+
+Benchmarks mirror the paper's standalone methodology (§9): build a filter
+over n keys, issue Q range- (or point-) queries of a fixed size per setting,
+and report FPR over empty queries + mean probe latency.  Distributions:
+uniform / normal / zipfian for both data and queries (Fig. 9/11).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+
+U64MAX = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+def gen_keys(n: int, dist: str, rng: np.random.Generator) -> np.ndarray:
+    if dist == "uniform":
+        return rng.integers(0, 1 << 63, n, dtype=np.uint64)
+    if dist == "normal":
+        x = rng.normal(0.5, 0.1, n)
+        return (np.clip(x, 0, 1) * float(1 << 62)).astype(np.uint64)
+    if dist == "zipf":
+        z = rng.zipf(1.2, n).astype(np.float64)
+        z = z / (z.max() + 1.0)
+        jitter = rng.integers(0, 1 << 32, n, dtype=np.uint64)
+        return (z * float(1 << 62)).astype(np.uint64) + jitter
+    raise ValueError(dist)
+
+
+def gen_empty_ranges(keys: np.ndarray, q: int, rsize: int, dist: str,
+                     rng: np.random.Generator):
+    """Query ranges (mostly empty — the paper's worst case) + truth mask."""
+    lo = gen_keys(q, dist, rng)
+    hi = lo + np.uint64(max(rsize - 1, 0))
+    hi = np.maximum(hi, lo)  # wrap guard
+    ks = np.sort(keys)
+    idx = np.searchsorted(ks, lo)
+    truth = (idx < len(ks)) & (ks[np.minimum(idx, len(ks) - 1)] <= hi)
+    return lo, hi, truth
+
+
+def measure_range(f, keys, lo, hi, truth):
+    t0 = time.perf_counter()
+    res = f.range(lo, hi)
+    dt = time.perf_counter() - t0
+    fn = int((truth & ~res).sum())
+    assert fn == 0, f"{type(f).__name__}: {fn} range false negatives"
+    empties = max(int((~truth).sum()), 1)
+    fpr = float((res & ~truth).sum()) / empties
+    return fpr, dt / len(lo) * 1e6  # us/query
+
+
+def measure_point(f, keys, qs, truth):
+    t0 = time.perf_counter()
+    res = f.point(qs)
+    dt = time.perf_counter() - t0
+    assert not (truth & ~res).any()
+    empties = max(int((~truth).sum()), 1)
+    fpr = float((res & ~truth).sum()) / empties
+    return fpr, dt / len(qs) * 1e6
+
+
+def emit(name: str, us_per_call, derived):
+    print(f"{name},{us_per_call:.3f},{derived}")
+    return (name, us_per_call, derived)

@@ -1,0 +1,42 @@
+"""Fig. 8: space (bits/key) vs FPR — bloomRF model, Rosetta first-cut model,
+and the theoretical lower bounds (Carter point / Goswami range)."""
+import numpy as np
+
+from .common import emit
+from repro.core.model import (basic_space_for_fpr, point_lower_bound_space,
+                              range_lower_bound_space, rosetta_space_for_fpr,
+                              basic_point_fpr)
+
+N = 10_000_000
+D = 64
+
+
+def run():
+    rows = []
+    # point queries (Fig. 8a)
+    for eps in (0.1, 0.03, 0.01, 0.003, 0.001):
+        lb = point_lower_bound_space(N, eps) / N
+        rows.append(emit(f"fig08/point/eps={eps}/lower_bound", 0.0, f"{lb:.2f}"))
+        # bloomRF point: invert eps = (1-p)^k via scan over m
+        for bpk in np.arange(6, 30, 0.5):
+            if basic_point_fpr(D, N, bpk * N) <= eps:
+                rows.append(emit(f"fig08/point/eps={eps}/bloomRF", 0.0,
+                                 f"{bpk:.2f}"))
+                break
+    # range queries (Fig. 8b), R = 16/32/64
+    for R in (16, 32, 64):
+        for eps in (0.1, 0.03, 0.01, 0.003):
+            lb = range_lower_bound_space(N, eps, R, D) / N
+            ros = rosetta_space_for_fpr(N, eps, R) / N
+            brf = basic_space_for_fpr(D, N, eps, R) / N
+            rows.append(emit(f"fig08/range/R={R}/eps={eps}/lower_bound", 0.0,
+                             f"{lb:.2f}"))
+            rows.append(emit(f"fig08/range/R={R}/eps={eps}/rosetta", 0.0,
+                             f"{ros:.2f}"))
+            rows.append(emit(f"fig08/range/R={R}/eps={eps}/bloomRF", 0.0,
+                             f"{brf:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Fig. 9: FPR + probe latency across query-range sizes and workload
+distributions at a fixed 22 bits/key budget (the paper's favorable setting)."""
+import numpy as np
+
+from .common import emit, gen_empty_ranges, gen_keys, measure_range
+from repro.filters import (BloomRFAdapter, FencePointers, PrefixBloomFilter,
+                           Rosetta, SuRFLite)
+
+N = 200_000
+Q = 10_000
+BPK = 22.0
+
+
+def _filters(rlog2):
+    return [
+        ("bloomRF", BloomRFAdapter(BPK, R=2.0 ** rlog2, mode="auto")),
+        ("rosetta", Rosetta(BPK, max_range_log2=min(rlog2, 16))),
+        ("surf", SuRFLite.for_budget(BPK)),
+        ("prefixBF", PrefixBloomFilter(BPK, prefix_level=max(rlog2 - 1, 1))),
+        ("minmax", FencePointers(BPK)),
+    ]
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(9)
+    keys = gen_keys(N, "uniform", rng)
+    for wdist in ("uniform", "normal", "zipf"):
+        for rlog2 in (2, 6, 10, 14, 18, 24, 30):
+            lo, hi, truth = gen_empty_ranges(keys, Q, 2 ** rlog2, wdist, rng)
+            for name, f in _filters(rlog2):
+                f.build(keys)
+                fpr, us = measure_range(f, keys, lo, hi, truth)
+                rows.append(emit(
+                    f"fig09/{wdist}/R=2^{rlog2}/{name}", us, f"{fpr:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

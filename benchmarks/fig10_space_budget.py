@@ -1,0 +1,45 @@
+"""Fig. 10: FPR across space budgets (10..22 bits/key) for small / medium /
+large ranges, plus point-query FPR vs a standard Bloom filter."""
+import numpy as np
+
+from .common import emit, gen_empty_ranges, gen_keys, measure_point, \
+    measure_range
+from repro.filters import (BloomFilter, BloomRFAdapter, Rosetta, SuRFLite)
+
+N = 200_000
+Q = 10_000
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(10)
+    keys = gen_keys(N, "uniform", rng)
+    classes = {"small": 6, "medium": 14, "large": 22}
+    for bpk in (10, 14, 18, 22):
+        for cls, rlog2 in classes.items():
+            lo, hi, truth = gen_empty_ranges(keys, Q, 2 ** rlog2, "uniform",
+                                             rng)
+            for name, f in [
+                ("bloomRF", BloomRFAdapter(bpk, R=2.0 ** rlog2, mode="auto")),
+                ("rosetta", Rosetta(bpk, max_range_log2=min(rlog2, 14))),
+                ("surf", SuRFLite.for_budget(bpk)),
+            ]:
+                f.build(keys)
+                fpr, us = measure_range(f, keys, lo, hi, truth)
+                rows.append(emit(f"fig10/{cls}/bpk={bpk}/{name}", us,
+                                 f"{fpr:.4f}"))
+        # point lookups
+        pq = np.concatenate([keys[:Q // 2],
+                             gen_keys(Q, "uniform", rng)])
+        ptruth = np.isin(pq, keys)
+        for name, f in [("bloomRF", BloomRFAdapter(bpk, mode="basic")),
+                        ("BF", BloomFilter(bpk))]:
+            f.build(keys)
+            fpr, us = measure_point(f, keys, pq, ptruth)
+            rows.append(emit(f"fig10/point/bpk={bpk}/{name}", us,
+                             f"{fpr:.5f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Fig. 11: holistic best-filter map over (n keys x budget x range x data
+distribution) — which PRF wins each cell (and by how much)."""
+import numpy as np
+
+from .common import emit, gen_empty_ranges, gen_keys, measure_range
+from repro.filters import BloomRFAdapter, Rosetta, SuRFLite
+
+Q = 4_000
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(11)
+    for n in (10_000, 100_000, 1_000_000):
+        for dist in ("uniform", "normal", "zipf"):
+            keys = gen_keys(n, dist, rng)
+            for bpk in (10, 16, 22):
+                for rlog2 in (4, 10, 16):
+                    lo, hi, truth = gen_empty_ranges(keys, Q, 2 ** rlog2,
+                                                     dist, rng)
+                    results = {}
+                    for name, f in [
+                        ("bloomRF", BloomRFAdapter(bpk, R=2.0 ** rlog2,
+                                                   mode="auto")),
+                        ("rosetta", Rosetta(bpk,
+                                            max_range_log2=min(rlog2, 14))),
+                        ("surf", SuRFLite.for_budget(bpk)),
+                    ]:
+                        f.build(keys)
+                        fpr, _ = measure_range(f, keys, lo, hi, truth)
+                        results[name] = fpr
+                    best = min(results, key=results.get)
+                    second = sorted(results.values())[1]
+                    delta = second - results[best]
+                    rows.append(emit(
+                        f"fig11/n={n}/{dist}/bpk={bpk}/R=2^{rlog2}",
+                        0.0, f"best={best};fpr={results[best]:.4f};"
+                             f"margin={delta:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

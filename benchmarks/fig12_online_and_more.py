@@ -1,0 +1,153 @@
+"""Fig. 12 panels:
+  A  — online behavior: mixed insert/lookup throughput at varying ratios;
+  C  — filter construction (build + serialize) time;
+  D  — floating-point keys (monotone codec) FPR across budgets;
+  E  — point-query FPR vs BF / cuckoo fingerprint sizes;
+  F  — dual-attribute filter vs two single-attribute filters;
+  G  — probe cost breakdown (word accesses/query; point vs range).
+"""
+import io
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from .common import emit, gen_empty_ranges, gen_keys, measure_point, \
+    measure_range
+from repro.core import BloomRF, basic_layout
+from repro.core.codecs import (float64_to_u64, multiattr_insert_codes,
+                               multiattr_range_for_a_eq_b_range)
+from repro.filters import (BloomFilter, BloomRFAdapter, CuckooFilter,
+                           Rosetta, SuRFLite)
+
+N = 200_000
+Q = 10_000
+
+
+def fig12a_online(rows, rng):
+    keys = gen_keys(N, "uniform", rng)
+    f = BloomRFAdapter(16, mode="basic")
+    f.build(keys[:1000])  # warm start
+    lookups = gen_keys(50_000, "uniform", rng)
+    for ratio in (0.0, 0.25, 0.5, 0.75):
+        n_ins = int(20_000 * ratio)
+        n_look = 20_000 - n_ins
+        t0 = time.perf_counter()
+        if n_ins:
+            f.insert_more(keys[1000:1000 + n_ins])
+        if n_look:
+            f.point(lookups[:n_look])
+        dt = time.perf_counter() - t0
+        rows.append(emit(f"fig12a/insert_ratio={ratio}/bloomRF",
+                         dt / 20_000 * 1e6, f"{20_000 / dt:.0f} ops/s"))
+
+
+def fig12c_construction(rows, rng):
+    keys = gen_keys(N, "uniform", rng)
+    for name, f in [("bloomRF", BloomRFAdapter(18, mode="basic")),
+                    ("rosetta", Rosetta(18, max_range_log2=10)),
+                    ("surf", SuRFLite.for_budget(18)),
+                    ("BF", BloomFilter(18))]:
+        t0 = time.perf_counter()
+        f.build(keys)
+        build = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        buf = io.BytesIO()  # serialization analogue of the SST filter block
+        state = getattr(f, "state", None)
+        np.save(buf, np.asarray(state) if state is not None
+                else np.zeros(1))
+        ser = time.perf_counter() - t0
+        rows.append(emit(f"fig12c/{name}", build / N * 1e6,
+                         f"build={build:.3f}s;serialize={ser:.4f}s"))
+
+
+def fig12d_floats(rows, rng):
+    # synthetic flux time series (NASA Kepler-like): values in [-1e3, 1e3]
+    vals = rng.normal(0, 100, N).astype(np.float64)
+    keys = float64_to_u64(vals)
+    for bpk in (10, 16, 22):
+        f = BloomRFAdapter(bpk, mode="tuned", R=2.0 ** 40)
+        f.build(keys)
+        qlo = rng.uniform(-500, 500, Q)
+        lo = float64_to_u64(qlo)
+        hi = float64_to_u64(qlo + 1e-3)
+        ks = np.sort(keys)
+        idx = np.searchsorted(ks, lo)
+        truth = (idx < len(ks)) & (ks[np.minimum(idx, len(ks) - 1)] <= hi)
+        fpr, us = measure_range(f, keys, lo, hi, truth)
+        rows.append(emit(f"fig12d/floats/bpk={bpk}/bloomRF", us,
+                         f"{fpr:.4f}"))
+
+
+def fig12e_point(rows, rng):
+    keys = gen_keys(N, "uniform", rng)
+    pq = np.concatenate([keys[:Q // 2], gen_keys(Q, "uniform", rng)])
+    truth = np.isin(pq, keys)
+    for name, f in [("BF-10", BloomFilter(10)),
+                    ("cuckoo-f8", CuckooFilter(8)),
+                    ("cuckoo-f12", CuckooFilter(12)),
+                    ("bloomRF-10", BloomRFAdapter(10, mode="basic")),
+                    ("surf-hash", SuRFLite(suffix_bits=8, mode="hash"))]:
+        f.build(keys)
+        fpr, us = measure_point(f, keys, pq, truth)
+        rows.append(emit(f"fig12e/{name}", us,
+                         f"{fpr:.5f};bpk={f.size_bits()/N:.1f}"))
+
+
+def fig12f_multiattr(rows, rng):
+    # SDSS-like: Run (normal-ish, reduced precision) and ObjectID
+    run_attr = np.abs(rng.normal(400, 150, N)).astype(np.uint64)
+    obj_attr = rng.integers(0, 1 << 31, N, dtype=np.uint64)
+    ab, ba = multiattr_insert_codes(obj_attr, run_attr)
+    dual = BloomRFAdapter(16, mode="tuned", R=2.0 ** 32)
+    dual.build(np.concatenate([ab, ba]))
+    fa = BloomRFAdapter(16, mode="basic")
+    fa.build(run_attr)
+    fb = BloomRFAdapter(16, mode="basic")
+    fb.build(obj_attr)
+    qs = rng.integers(0, 1 << 31, Q, dtype=np.uint64)  # ObjectID = const
+    # predicate: Run < 300 AND ObjectID = q  ->  range on <ObjectID, Run>
+    lo, hi = multiattr_range_for_a_eq_b_range(qs, np.uint64(0),
+                                              np.uint64(299))
+    res_dual = dual.range(lo, hi)
+    res_sep = fb.point(qs)  # Run<300 filter alone is ~always true
+    ks = np.sort(ab)
+    idx = np.searchsorted(ks, lo)
+    truth = (idx < len(ks)) & (ks[np.minimum(idx, len(ks) - 1)] <= hi)
+    for name, res in (("dual", res_dual), ("separate", res_sep)):
+        assert not (truth & ~res).any()
+        fpr = (res & ~truth).sum() / max((~truth).sum(), 1)
+        rows.append(emit(f"fig12f/{name}", 0.0, f"{fpr:.4f}"))
+
+
+def fig12g_cost(rows, rng):
+    keys = gen_keys(N, "uniform", rng)
+    f = BloomRFAdapter(22, mode="basic")
+    f.build(keys)
+    inner = f.filter
+    rows.append(emit("fig12g/word_accesses/point", 0.0,
+                     inner.word_accesses_per_point_query()))
+    rows.append(emit("fig12g/word_accesses/range", 0.0,
+                     inner.word_accesses_per_range_query()))
+    lo, hi, truth = gen_empty_ranges(keys, Q, 2 ** 12, "uniform", rng)
+    _, us_r = measure_range(f, keys, lo, hi, truth)
+    pq = gen_keys(Q, "uniform", rng)
+    _, us_p = measure_point(f, keys, pq, np.isin(pq, keys))
+    rows.append(emit("fig12g/probe_us/point", us_p, "cpu-xla"))
+    rows.append(emit("fig12g/probe_us/range", us_r, "cpu-xla"))
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(12)
+    fig12a_online(rows, rng)
+    fig12c_construction(rows, rng)
+    fig12d_floats(rows, rng)
+    fig12e_point(rows, rng)
+    fig12f_multiattr(rows, rng)
+    fig12g_cost(rows, rng)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

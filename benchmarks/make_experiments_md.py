@@ -1,0 +1,78 @@
+"""Generate the §Dry-run / §Roofline tables of EXPERIMENTS.md from
+results/dryrun_final.json (static sections live in the template below)."""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config          # noqa: E402
+from repro.models import SHAPES, get_model    # noqa: E402
+from repro.models.params import count_params  # noqa: E402
+
+PEAK = 197e12
+
+
+def model_flops(arch, shape_name):
+    cfg = get_config(arch)
+    n = count_params(get_model(cfg).table())
+    if cfg.family == "moe":
+        dense_share = n - (cfg.n_experts * 3 * cfg.d_model * cfg.d_ff *
+                           cfg.n_layers)
+        n = dense_share + (cfg.experts_per_token * 3 * cfg.d_model *
+                           cfg.d_ff * cfg.n_layers)
+    shape = SHAPES[shape_name]
+    tokens = shape.batch * (shape.seq if shape.kind != "decode" else 1)
+    return (6.0 if shape.kind == "train" else 2.0) * n * tokens
+
+
+def table(recs, mesh):
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "dominant | roofline frac | useful FLOPs |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"SKIPPED ({r.get('note','')[:40]}) | — | — |")
+            continue
+        t = r["roofline_terms_s"]
+        bound = max(t.values())
+        frac = t["compute_s"] / max(bound, 1e-12)
+        mf = model_flops(r["arch"], r["shape"])
+        useful = mf / max(r["flops_per_device"] * r["chips"], 1.0)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+            f"{r['dominant'][:-2]} | {frac:.3f} | {useful:.2f} |")
+    return "\n".join(rows)
+
+
+def main(path="results/dryrun_final.json"):
+    recs = json.load(open(path))
+    ok = [r for r in recs if r["status"] == "ok"]
+    print(f"{len(ok)} ok / {len(recs)} cells")
+    single = table(recs, "single")
+    multi = table(recs, "multi")
+    open("results/roofline_single.md", "w").write(single)
+    open("results/roofline_multi.md", "w").write(multi)
+    # compact per-cell dry-run facts
+    lines = []
+    for r in ok:
+        mem = r.get("memory_analysis") or {}
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['chips']} | "
+            f"{r['flops_per_device']:.2e} | {r['bytes_per_device']:.2e} | "
+            f"{r['collective_bytes_per_device']:.2e} | "
+            f"{r['compile_s']:.0f}s |")
+    open("results/dryrun_table.md", "w").write(
+        "| arch | shape | mesh | chips | FLOPs/dev | bytes/dev | "
+        "coll bytes/dev | compile |\n|---|---|---|---|---|---|---|---|\n" +
+        "\n".join(lines))
+    print("wrote results/roofline_single.md, roofline_multi.md, "
+          "dryrun_table.md")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,61 @@
+"""Render the dry-run roofline table (results/dryrun.json) as CSV rows and
+derive MODEL_FLOPS / usefulness ratios per cell (EXPERIMENTS.md §Roofline)."""
+import json
+import os
+
+from .common import emit
+from repro.configs import get_config
+from repro.models import get_model, SHAPES
+from repro.models.params import count_params
+
+PEAK_FLOPS = 197e12
+
+_RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "dryrun.json")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6·N(_active)·D for train; 2·N_active·tokens for a decode step."""
+    cfg = get_config(arch)
+    model = get_model(cfg)
+    n = count_params(model.table())
+    if cfg.family == "moe":
+        # active params: replace expert count with experts_per_token
+        dense_share = n - (cfg.n_experts * 3 * cfg.d_model * cfg.d_ff *
+                           cfg.n_layers)
+        n = dense_share + (cfg.experts_per_token * 3 * cfg.d_model *
+                           cfg.d_ff * cfg.n_layers)
+    shape = SHAPES[shape_name]
+    tokens = shape.batch * (shape.seq if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def run():
+    rows = []
+    if not os.path.exists(_RESULTS):
+        rows.append(emit("roofline/missing", 0.0,
+                         "run repro.launch.dryrun first"))
+        return rows
+    recs = json.load(open(_RESULTS))
+    for r in recs:
+        tag = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] != "ok":
+            rows.append(emit(tag, 0.0, r["status"]))
+            continue
+        t = r["roofline_terms_s"]
+        mf = model_flops(r["arch"], r["shape"])
+        hlo_global = r["flops_per_device"] * r["chips"]
+        useful = mf / max(hlo_global, 1.0)
+        bound = max(t.values())
+        frac = t["compute_s"] / max(bound, 1e-12)
+        rows.append(emit(
+            tag, bound * 1e6,
+            f"dom={r['dominant'][:-2]};roofline_frac={frac:.3f};"
+            f"useful_flops={useful:.2f};comp={t['compute_s']:.3e};"
+            f"mem={t['memory_s']:.3e};coll={t['collective_s']:.3e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Benchmark harness: one module per paper table/figure (DESIGN.md §7).
+Prints ``name,us_per_call,derived`` CSV rows.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only fig09,fig12]
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module name filter")
+    args = ap.parse_args()
+
+    from . import (fig08_space, fig09_ranges, fig10_space_budget,
+                   fig11_holistic, fig12_online_and_more, kernels_bench,
+                   roofline_report)
+    modules = [
+        ("fig08", fig08_space), ("fig09", fig09_ranges),
+        ("fig10", fig10_space_budget), ("fig11", fig11_holistic),
+        ("fig12", fig12_online_and_more), ("kernels", kernels_bench),
+        ("roofline", roofline_report),
+    ]
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, mod in modules:
+        if only and name not in only:
+            continue
+        print(f"# --- {name} ---", file=sys.stderr)
+        mod.run()
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

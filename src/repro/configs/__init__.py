@@ -1,0 +1,3 @@
+from .base import ARCH_NAMES, get_config, cells, shape_applicable
+
+__all__ = ["ARCH_NAMES", "get_config", "cells", "shape_applicable"]

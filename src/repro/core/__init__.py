@@ -1,0 +1,12 @@
+"""bloomRF core: the paper's contribution as a composable JAX module."""
+from .layout import FilterLayout, basic_layout, require_x64
+from .bloomrf import BloomRF
+from .hashing import key_dtype_for
+
+__all__ = [
+    "FilterLayout",
+    "basic_layout",
+    "require_x64",
+    "BloomRF",
+    "key_dtype_for",
+]

@@ -1,0 +1,388 @@
+"""bloomRF: point-range filter with prefix hashing and piecewise-monotone
+hash functions (PMHF), in pure JAX.
+
+Design notes (see DESIGN.md §5):
+
+* The filter state is a flat ``uint32[total_u32]`` vector ("lanes").  A PMHF
+  *word* of ``W = 2^{Δ-1}`` bits is 1–2 lanes (W in {1,2,4,8,16,32,64}); words
+  never straddle lanes because W | 32 or W == 64 with even-lane alignment.
+* All control flow is branch-free: the two-path range lookup evaluates every
+  layer with live/dead path masks (the paper's early-stop becomes a mask AND —
+  identical results, SIMD/TPU friendly).  The k-layer loop is unrolled at
+  trace time; every shape is static.
+* Insert / point / range are pure functions of ``(state, keys)`` and are
+  jit/vmap-compatible.  64-bit domains require the x64 flag (see
+  ``layout.require_x64``).
+
+False-negative freedom: insert and every probe share the single pair of
+position functions ``_load_word`` / ``_bit_probe``; property tests exercise
+this exhaustively on small domains and randomly on 64-bit domains.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hashing import key_dtype_for, mix
+from .layout import FilterLayout, require_x64
+
+__all__ = ["BloomRF"]
+
+_FULL = 0xFFFFFFFF
+
+
+def _mask_u32(a, b):
+    """uint32 mask with bits [a..b] set; empty when b < a. a,b int32 (clamped)."""
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    a_c = jnp.clip(a, 0, 32)
+    b_c = jnp.clip(b + 1, 0, 32)
+    width = jnp.maximum(b_c - a_c, 0)
+    sh_w = jnp.minimum(width, 31).astype(jnp.uint32)
+    base = jnp.where(
+        width >= 32, jnp.uint32(_FULL), (jnp.uint32(1) << sh_w) - jnp.uint32(1)
+    )
+    sh_a = jnp.minimum(a_c, 31).astype(jnp.uint32)
+    return jnp.where(width > 0, base << sh_a, jnp.uint32(0))
+
+
+class BloomRF:
+    """Unified point-range filter (paper §3–§7)."""
+
+    def __init__(self, layout: FilterLayout):
+        require_x64(layout.d)
+        self.layout = layout
+        self.kdtype = key_dtype_for(layout.d)
+        self.pos_dtype = jnp.int64 if layout.d > 32 else jnp.int32
+        # trace-time constant tables
+        self._seeds = layout.seeds  # np.uint64 (k, rmax)
+        self._probes_per_key = sum(layout.replicas) + (1 if layout.has_exact else 0)
+
+    # -- helpers ---------------------------------------------------------
+    def _kd(self, v):
+        return jnp.asarray(v, self.kdtype)
+
+    def _shr(self, x, s: int):
+        """x >> s with the static s == d case (full shift-out) well-defined."""
+        if s >= self.layout.d and s >= (32 if self.layout.d <= 32 else 64):
+            return jnp.zeros_like(x)
+        return x >> s
+
+    def init_state(self) -> jax.Array:
+        return jnp.zeros(self.layout.total_u32, jnp.uint32)
+
+    # ------------------------------------------------------------------
+    # position computation (shared by insert and probes)
+    # ------------------------------------------------------------------
+    def _positions_one(self, x):
+        """All bit positions set/probed for key ``x`` (static count)."""
+        lay = self.layout
+        x = self._kd(x)
+        out = []
+        for i in range(lay.k):
+            li = lay.levels[i]
+            delta = lay.deltas[i]
+            W = lay.word_bits(i)
+            nw = lay.nwords(i)
+            offbits = lay.seg_off_bits[lay.seg_of_layer[i]]
+            off = (x >> li) & self._kd(W - 1)
+            wkey = x >> (li + delta - 1)
+            for rep in range(lay.replicas[i]):
+                h = mix(wkey, self._seeds[i, rep], lay.d)
+                widx = (h % np.asarray(nw, h.dtype)).astype(self.kdtype)
+                bitpos = self._kd(offbits) + widx * self._kd(W) + off
+                out.append(bitpos.astype(self.pos_dtype))
+        if lay.has_exact:
+            bitpos = self._kd(lay.exact_off_bits) + self._shr(x, lay.top_level)
+            out.append(bitpos.astype(self.pos_dtype))
+        return jnp.stack(out)
+
+    # ------------------------------------------------------------------
+    # insertion
+    # ------------------------------------------------------------------
+    def insert(self, state: jax.Array, keys) -> jax.Array:
+        """Bulk insert: scatter into a transient bit-expanded buffer, pack,
+        OR into the packed state.  Exact w.r.t. duplicate positions."""
+        keys = jnp.atleast_1d(jnp.asarray(keys, self.kdtype))
+        pos = jax.vmap(self._positions_one)(keys).reshape(-1)
+        temp = jnp.zeros(self.layout.total_bits, jnp.bool_).at[pos].set(True)
+        lanes = temp.reshape(-1, 32).astype(jnp.uint32)
+        packed = jnp.sum(lanes << jnp.arange(32, dtype=jnp.uint32)[None, :],
+                         axis=1, dtype=jnp.uint32)
+        return state | packed
+
+    def insert_online(self, state: jax.Array, keys) -> jax.Array:
+        """Streaming insert (no O(m) temp): sequential read-modify-write OR.
+        Suited to small online batches; bulk builds should use ``insert``."""
+        keys = jnp.atleast_1d(jnp.asarray(keys, self.kdtype))
+        pos = jax.vmap(self._positions_one)(keys)  # (B, P)
+        lane = (pos >> 5).astype(jnp.int32)
+        mask = jnp.uint32(1) << (pos & 31).astype(jnp.uint32)
+
+        def body(j, st):
+            for t in range(self._probes_per_key):
+                l = lane[j, t]
+                st = st.at[l].set(st[l] | mask[j, t])
+            return st
+
+        return jax.lax.fori_loop(0, keys.shape[0], body, state)
+
+    def build(self, keys) -> jax.Array:
+        return self.insert(self.init_state(), keys)
+
+    def build_np(self, keys_np: np.ndarray, chunk: int = 1 << 20) -> jax.Array:
+        """Host-side bulk build for very large key sets (numpy OR-scatter);
+        avoids the O(total_bits) transient of ``insert``."""
+        buf = np.zeros(self.layout.total_u32, np.uint32)
+        posf = jax.jit(jax.vmap(self._positions_one))
+        for s in range(0, len(keys_np), chunk):
+            pos = np.asarray(posf(jnp.asarray(keys_np[s:s + chunk], self.kdtype)))
+            pos = pos.reshape(-1)
+            np.bitwise_or.at(buf, pos >> 5, np.uint32(1) << (pos & 31).astype(np.uint32))
+        return jnp.asarray(buf)
+
+    # ------------------------------------------------------------------
+    # point lookup
+    # ------------------------------------------------------------------
+    def point(self, state: jax.Array, ys) -> jax.Array:
+        ys = jnp.asarray(ys, self.kdtype)
+        scalar = ys.ndim == 0
+        ys = jnp.atleast_1d(ys)
+        pos = jax.vmap(self._positions_one)(ys)  # (B, P)
+        lane = (pos >> 5).astype(jnp.int32)
+        sh = (pos & 31).astype(jnp.uint32)
+        bits = (state[lane] >> sh) & jnp.uint32(1)
+        res = jnp.all(bits == 1, axis=1)
+        return res[0] if scalar else res
+
+    # ------------------------------------------------------------------
+    # word-level probes (range machinery)
+    # ------------------------------------------------------------------
+    def _load_word(self, state, i: int, wordkey):
+        """Load the layer-i word addressed by ``wordkey`` (= prefix >> (Δ-1)),
+        AND-combined across replicas.  Returns (lo, hi) uint32 lanes; hi == 0
+        for W <= 32."""
+        lay = self.layout
+        W = lay.word_bits(i)
+        nw = lay.nwords(i)
+        offbits = lay.seg_off_bits[lay.seg_of_layer[i]]
+        lo = jnp.uint32(_FULL)
+        hi = jnp.uint32(_FULL) if W == 64 else jnp.uint32(0)
+        for rep in range(lay.replicas[i]):
+            h = mix(wordkey, self._seeds[i, rep], lay.d)
+            widx = (h % np.asarray(nw, h.dtype)).astype(self.kdtype)
+            bitoff = self._kd(offbits) + widx * self._kd(W)
+            lane = (bitoff >> 5).astype(jnp.int32)
+            v = state[lane]
+            if W == 64:
+                lo = lo & v
+                hi = hi & state[lane + 1]
+            elif W == 32:
+                lo = lo & v
+            else:
+                sh = (bitoff & 31).astype(jnp.uint32)
+                lo = lo & ((v >> sh) & jnp.uint32((1 << W) - 1))
+        return lo, hi
+
+    def _bit_probe(self, state, i: int, x):
+        """Single covering-bit probe at layer i for key x (replica-ANDed)."""
+        lay = self.layout
+        li = lay.levels[i]
+        delta = lay.deltas[i]
+        W = lay.word_bits(i)
+        off = ((x >> li) & self._kd(W - 1)).astype(jnp.uint32)
+        lo, hi = self._load_word(state, i, x >> (li + delta - 1))
+        bit_lo = (lo >> jnp.minimum(off, 31)) & jnp.uint32(1)
+        if W == 64:
+            bit_hi = (hi >> (jnp.maximum(off, 32) - 32)) & jnp.uint32(1)
+            bit = jnp.where(off < 32, bit_lo, bit_hi)
+        else:
+            bit = bit_lo
+        return bit != 0
+
+    def _mask_pair(self, a, b, W: int):
+        """(lo, hi) uint32 masks for bit range [a..b] in a W-bit word."""
+        if W <= 32:
+            return _mask_u32(a, b), jnp.uint32(0)
+        return _mask_u32(a, jnp.minimum(b, 31)), _mask_u32(a - 32, b - 32)
+
+    def _children_any(self, state, i: int, parent, qlo, qhi, nonempty):
+        """Test whether any prefix in [qlo, qhi] (children of ``parent`` at
+        layer i) has its bit set.  <= 2 word loads (the paper's PMHF payoff)."""
+        lay = self.layout
+        delta = lay.deltas[i]
+        W = lay.word_bits(i)
+        base = parent << delta
+        last = base | self._kd((1 << delta) - 1)
+        qlo_c = jnp.clip(qlo, base, last)
+        qhi_c = jnp.clip(qhi, base, last)
+        o_lo = (qlo_c - base).astype(jnp.int32)  # 0..2W-1
+        o_hi = (qhi_c - base).astype(jnp.int32)
+        # a parent always has 2^delta = 2W children -> exactly two words
+        wkA = parent << 1
+        wkB = (parent << 1) | self._kd(1)
+        loA, hiA = self._load_word(state, i, wkA)
+        mAlo, mAhi = self._mask_pair(o_lo, jnp.minimum(o_hi, W - 1), W)
+        acc = (loA & mAlo) | (hiA & mAhi)
+        loB, hiB = self._load_word(state, i, wkB)
+        # empty automatically when o_hi < W (negative b -> zero mask)
+        mBlo, mBhi = self._mask_pair(jnp.maximum(o_lo - W, 0), o_hi - W, W)
+        acc = acc | (loB & mBlo) | (hiB & mBhi)
+        return nonempty & (acc != 0)
+
+    # ------------------------------------------------------------------
+    # exact-bitmap probes
+    # ------------------------------------------------------------------
+    def _exact_bit(self, state, prefix):
+        lay = self.layout
+        pos = (self._kd(lay.exact_off_bits) + prefix).astype(self.pos_dtype)
+        lane = (pos >> 5).astype(jnp.int32)
+        sh = (pos & 31).astype(jnp.uint32)
+        return ((state[lane] >> sh) & jnp.uint32(1)) != 0
+
+    def _exact_range_any(self, state, qlo, qhi, nonempty):
+        """Any exact-bitmap bit set in prefix range [qlo, qhi]?  Bounded lane
+        scan (cap -> conservative True: the paper's R-bound)."""
+        lay = self.layout
+        nbits = lay.exact_nbits
+        qlo_c = jnp.clip(qlo, self._kd(0), self._kd(nbits - 1))
+        qhi_c = jnp.clip(qhi, self._kd(0), self._kd(nbits - 1))
+        p0 = (self._kd(lay.exact_off_bits) + qlo_c).astype(self.pos_dtype)
+        p1 = (self._kd(lay.exact_off_bits) + qhi_c).astype(self.pos_dtype)
+        lane0 = (p0 >> 5).astype(jnp.int32)
+        lane1 = (p1 >> 5).astype(jnp.int32)
+        b0 = (p0 & 31).astype(jnp.int32)
+        b1 = (p1 & 31).astype(jnp.int32)
+        over_cap = (lane1 - lane0 + 1) > lay.max_exact_scan_lanes
+        # scan at most the cap; over-cap queries answer conservatively True
+        lane_end = jnp.minimum(lane1, lane0 + lay.max_exact_scan_lanes - 1)
+
+        def cond(c):
+            l, found = c
+            return jnp.logical_and(~found, l <= lane_end)
+
+        def body(c):
+            l, found = c
+            m = _mask_u32(jnp.where(l == lane0, b0, 0),
+                          jnp.where(l == lane1, b1, 31))
+            return l + 1, found | ((state[l] & m) != 0)
+
+        _, any_hit = jax.lax.while_loop(cond, body, (lane0, jnp.asarray(False)))
+        return nonempty & (over_cap | any_hit)
+
+    # ------------------------------------------------------------------
+    # range lookup: two-path dyadic decomposition (paper §4, Algorithm 1)
+    # ------------------------------------------------------------------
+    def _range_one(self, state, L, R):
+        lay = self.layout
+        L = self._kd(L)
+        R = self._kd(R)
+        L, R = jnp.minimum(L, R), jnp.maximum(L, R)
+        top = lay.top_level
+        false = jnp.asarray(False)
+
+        if top >= lay.d:
+            # levels cover the whole domain: single covering path from the top
+            result = false
+            split = false
+            left_alive = jnp.asarray(True)
+            right_alive = false
+        else:
+            lt = self._shr(L, top)
+            rt = self._shr(R, top)
+            split = lt != rt
+            if lay.has_exact:
+                covL = self._exact_bit(state, lt)
+                covR = self._exact_bit(state, rt)
+                mid_nonempty = (rt - lt) >= self._kd(2)
+                one = self._kd(1)
+                result = self._exact_range_any(state, lt + one, rt - one,
+                                               mid_nonempty)
+                left_alive = covL
+                right_alive = covR & split
+            else:
+                # saturated top levels omitted: a middle gap of >= 1 full
+                # top-level DI is untestable -> conservative positive
+                result = (rt - lt) >= self._kd(2)
+                left_alive = jnp.asarray(True)
+                right_alive = split
+
+        for i in reversed(range(lay.k)):
+            li = lay.levels[i]
+            li1 = lay.levels[i + 1]
+            delta = lay.deltas[i]
+            bottom = i == 0
+            Lp = self._shr(L, li)
+            Rp = self._shr(R, li)
+            Lpar = self._shr(L, li1)
+            Rpar = self._shr(R, li1)
+            one = self._kd(1)
+            edge = self._kd(0) if bottom else one
+
+            # --- left path (doubles as the single pre-split path)
+            l_end = (Lpar << delta) | self._kd((1 << delta) - 1)
+            l_qlo = Lp + edge
+            l_qhi = jnp.where(split, l_end, Rp - edge)
+            if bottom:
+                l_nonempty_pre = jnp.asarray(True)
+                l_nonempty_post = jnp.asarray(True)
+            else:
+                l_nonempty_pre = (Rp - Lp) >= self._kd(2)
+                l_nonempty_post = Lp != l_end
+            l_nonempty = jnp.where(split, l_nonempty_post, l_nonempty_pre)
+            hit_l = self._children_any(state, i, Lpar, l_qlo, l_qhi,
+                                       l_nonempty & left_alive)
+            result = result | hit_l
+
+            # --- right path (only live after the split)
+            r_start = Rpar << delta
+            r_qhi = Rp - edge
+            r_nonempty = jnp.asarray(True) if bottom else (Rp != r_start)
+            hit_r = self._children_any(state, i, Rpar, r_start, r_qhi,
+                                       r_nonempty & right_alive)
+            result = result | hit_r
+
+            # --- covering continuation (early-stop as mask AND)
+            if not bottom:
+                covL = self._bit_probe(state, i, L)
+                covR = self._bit_probe(state, i, R)
+                new_split = split | (Lp != Rp)
+                nxt_left = left_alive & covL
+                nxt_right = jnp.where(split, right_alive, left_alive & new_split)
+                nxt_right = nxt_right & covR
+                left_alive, right_alive, split = nxt_left, nxt_right, new_split
+
+        return result
+
+    def range(self, state: jax.Array, lo, hi) -> jax.Array:
+        lo = jnp.asarray(lo, self.kdtype)
+        hi = jnp.asarray(hi, self.kdtype)
+        scalar = lo.ndim == 0
+        lo = jnp.atleast_1d(lo)
+        hi = jnp.atleast_1d(hi)
+        res = jax.vmap(partial(self._range_one, state))(lo, hi)
+        return res[0] if scalar else res
+
+    # ------------------------------------------------------------------
+    # cost accounting (fig. 12g)
+    # ------------------------------------------------------------------
+    def word_accesses_per_range_query(self) -> int:
+        """Static upper bound on word loads per range query (paper: <= 4/layer
+        + coverings, times replicas)."""
+        lay = self.layout
+        total = 0
+        for i in range(lay.k):
+            words = 4 if lay.deltas[i] > 1 else 2  # 2 words/path only if Δ>1
+            cov = 2 if i > 0 else 0
+            total += (words + cov) * lay.replicas[i]
+        if lay.has_exact:
+            total += 3  # two covering bits + (amortized) mid scan
+        return total
+
+    def word_accesses_per_point_query(self) -> int:
+        lay = self.layout
+        return sum(lay.replicas) + (1 if lay.has_exact else 0)

@@ -1,0 +1,93 @@
+"""Hash functions for bloomRF.
+
+The paper uses ``h_i(x) = (a_i + b_i * x) mod m`` (multiply-add mod prime).
+On TPU VPUs integer multiplies are cheap but division/mod by non-constants is
+not, so we use the splitmix64 / murmur3-finalizer mixing family (Dietzfelbinger
+multiply-shift style): full-width wrapping multiplies + xor-shifts, which give
+avalanche behaviour at least as good as the paper's multiplicative hashing.
+The FPR model (core/model.py) is hash-agnostic; tests verify the empirical FPR
+matches the model, which is the property the paper relies on.
+
+All functions are pure jnp and work both inside and outside jit.  Key dtype is
+uint32 for domains d <= 32 bits and uint64 for d <= 64 (requires the x64 flag;
+see repro.core.layout.require_x64).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = [
+    "splitmix64_np",
+    "derive_seeds",
+    "mix64",
+    "mix32",
+    "mix",
+    "key_dtype_for",
+]
+
+_U64 = np.uint64
+
+# ---------------------------------------------------------------------------
+# Host-side (numpy) seed derivation
+# ---------------------------------------------------------------------------
+
+def splitmix64_np(state: int) -> tuple[int, int]:
+    """One splitmix64 step on python ints. Returns (new_state, output)."""
+    mask = (1 << 64) - 1
+    state = (state + 0x9E3779B97F4A7C15) & mask
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & mask
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & mask
+    z = z ^ (z >> 31)
+    return state, z
+
+
+def derive_seeds(base_seed: int, n: int) -> np.ndarray:
+    """Derive ``n`` decorrelated 64-bit seeds from a base seed (host side)."""
+    out = np.empty(n, dtype=_U64)
+    s = base_seed & ((1 << 64) - 1)
+    for i in range(n):
+        s, z = splitmix64_np(s)
+        out[i] = _U64(z)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Device-side mixing
+# ---------------------------------------------------------------------------
+
+def mix64(x):
+    """splitmix64 finalizer on uint64 arrays (wrapping arithmetic)."""
+    x = jnp.asarray(x, jnp.uint64)
+    x = (x ^ (x >> jnp.uint64(30))) * jnp.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> jnp.uint64(27))) * jnp.uint64(0x94D049BB133111EB)
+    x = x ^ (x >> jnp.uint64(31))
+    return x
+
+
+def mix32(x):
+    """murmur3-style 32-bit finalizer on uint32 arrays."""
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def mix(x, seed, key_bits: int):
+    """Seeded finalizer in the key dtype. ``seed`` is a python/numpy uint64."""
+    if key_bits > 32:
+        return mix64(jnp.asarray(x, jnp.uint64) ^ jnp.uint64(seed))
+    return mix32(jnp.asarray(x, jnp.uint32) ^ jnp.uint32(int(seed) & 0xFFFFFFFF))
+
+
+def key_dtype_for(d: int):
+    """Key dtype for a d-bit domain."""
+    if d <= 32:
+        return jnp.uint32
+    if d <= 64:
+        return jnp.uint64
+    raise ValueError(f"domain bits must be <= 64, got {d}")

@@ -1,0 +1,140 @@
+"""Streaming training-data pipeline with bloomRF integration.
+
+The paper's Problem 2 — existing point-range filters are *offline* — is
+exactly the constraint of a streaming ingestion loop: documents arrive while
+dedup/admission queries are served.  bloomRF is online, so:
+
+* :class:`StreamDeduper` — an online dedup filter over 32-bit document-hash
+  sub-domains (the 64-bit hash is range-partitioned by its top 32 bits across
+  ingestion shards, matching the kernel deployment in DESIGN.md §3).  A false
+  positive drops a unique document (harmless); false negatives are impossible,
+  so no duplicate is ever *guaranteed* unseen.
+* :class:`ShardRangeIndex` — ZoneMap-style shard admission: each corpus shard
+  carries a bloomRF over document timestamps; a freshness window query
+  ("any docs in [t0, t1]?") skips cold shards without reading them.
+* :func:`batch_iterator` — packs deduped documents into (B, S) token batches
+  with next-token labels.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import BloomRF, basic_layout
+from ..filters.api import mix64_np
+
+__all__ = ["SyntheticCorpus", "StreamDeduper", "ShardRangeIndex",
+           "batch_iterator"]
+
+
+class SyntheticCorpus:
+    """Deterministic zipf-token document stream with duplicates."""
+
+    def __init__(self, vocab: int, seed: int = 0, dup_rate: float = 0.2,
+                 mean_len: int = 256, n_shards: int = 8,
+                 docs_per_shard: int = 128):
+        self.vocab = vocab
+        self.rng = np.random.default_rng(seed)
+        self.dup_rate = dup_rate
+        self.mean_len = mean_len
+        self.n_shards = n_shards
+        self.docs_per_shard = docs_per_shard
+
+    def shards(self) -> Iterator[dict]:
+        seen_docs: List[np.ndarray] = []
+        t = 0
+        for s in range(self.n_shards):
+            docs, ids, stamps = [], [], []
+            for _ in range(self.docs_per_shard):
+                t += int(self.rng.integers(1, 20))
+                if seen_docs and self.rng.random() < self.dup_rate:
+                    tokens = seen_docs[self.rng.integers(len(seen_docs))]
+                else:
+                    n = max(8, int(self.rng.normal(self.mean_len, 32)))
+                    tokens = self.rng.zipf(1.3, n).astype(np.int64) % self.vocab
+                    tokens = tokens.astype(np.int32)
+                    seen_docs.append(tokens)
+                docs.append(tokens)
+                ids.append(int(mix64_np(
+                    np.asarray([hash(tokens.tobytes()) & ((1 << 63) - 1)],
+                               np.uint64))[0]))
+                stamps.append(t)
+            yield {"shard": s, "docs": docs,
+                   "doc_ids": np.asarray(ids, np.uint64),
+                   "timestamps": np.asarray(stamps, np.uint64)}
+
+
+class StreamDeduper:
+    """Online dedup: point-query then insert (bloomRF insert_online path)."""
+
+    def __init__(self, expected_docs: int, bits_per_key: float = 14.0):
+        self.layout = basic_layout(32, expected_docs, bits_per_key, delta=6)
+        self.filter = BloomRF(self.layout)
+        self.state = self.filter.init_state()
+        self.stats = {"seen": 0, "dropped": 0}
+
+    def admit(self, doc_ids: np.ndarray) -> np.ndarray:
+        """Returns a keep-mask; inserts the kept ids (online)."""
+        keys = jnp.asarray(doc_ids >> np.uint64(32), jnp.uint32) ^ \
+            jnp.asarray(doc_ids & np.uint64(0xFFFFFFFF), jnp.uint32)
+        dup = np.asarray(self.filter.point(self.state, keys))
+        keep = ~dup
+        if keep.any():
+            self.state = self.filter.insert_online(self.state, keys[keep])
+        self.stats["seen"] += len(doc_ids)
+        self.stats["dropped"] += int(dup.sum())
+        return keep
+
+
+class ShardRangeIndex:
+    """Per-shard bloomRF over timestamps: freshness-window admission."""
+
+    def __init__(self, bits_per_key: float = 12.0):
+        self.bits_per_key = bits_per_key
+        self.shards: Dict[int, tuple] = {}
+
+    def add_shard(self, shard_id: int, timestamps: np.ndarray) -> None:
+        lay = basic_layout(32, max(len(timestamps), 1), self.bits_per_key,
+                           delta=6)
+        f = BloomRF(lay)
+        st = f.build(jnp.asarray(timestamps, jnp.uint32))
+        self.shards[shard_id] = (f, st)
+
+    def shards_in_window(self, t0: int, t1: int) -> List[int]:
+        out = []
+        for sid, (f, st) in self.shards.items():
+            if bool(f.range(st, jnp.uint32(t0), jnp.uint32(t1))):
+                out.append(sid)
+        return out
+
+
+def batch_iterator(corpus: SyntheticCorpus, batch: int, seq: int,
+                   deduper: Optional[StreamDeduper] = None,
+                   window: Optional[tuple] = None) -> Iterator[dict]:
+    """Pack admitted documents into (B, S) token/label batches, forever."""
+    index = ShardRangeIndex()
+    shard_list = list(corpus.shards())
+    for sh in shard_list:
+        index.add_shard(sh["shard"], sh["timestamps"])
+    admitted = (set(index.shards_in_window(*window)) if window is not None
+                else {sh["shard"] for sh in shard_list})
+    stream: List[np.ndarray] = []
+    while True:
+        for sh in shard_list:
+            if sh["shard"] not in admitted:
+                continue
+            keep = (deduper.admit(sh["doc_ids"]) if deduper is not None
+                    else np.ones(len(sh["docs"]), bool))
+            for d, k in zip(sh["docs"], keep):
+                if k:
+                    stream.append(d)
+            while sum(len(d) for d in stream) >= batch * (seq + 1):
+                flat = np.concatenate(stream)
+                take = batch * (seq + 1)
+                chunk = flat[:take].reshape(batch, seq + 1)
+                rest = flat[take:]
+                stream = [rest] if len(rest) else []
+                yield {"tokens": jnp.asarray(chunk[:, :-1]),
+                       "labels": jnp.asarray(chunk[:, 1:])}

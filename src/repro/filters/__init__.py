@@ -1,0 +1,25 @@
+"""Baseline filters the paper evaluates against (§9), plus a common API.
+
+All baselines are host-side numpy implementations (they model CPU data
+structures); bloomRF itself is the JAX implementation in ``repro.core`` and is
+adapted to the same API by :class:`BloomRFAdapter`.
+"""
+from .api import PointRangeFilter
+from .bloom import BloomFilter
+from .prefix_bloom import PrefixBloomFilter
+from .minmax import FencePointers
+from .rosetta import Rosetta
+from .surf_lite import SuRFLite
+from .cuckoo import CuckooFilter
+from .bloomrf_adapter import BloomRFAdapter
+
+__all__ = [
+    "PointRangeFilter",
+    "BloomFilter",
+    "PrefixBloomFilter",
+    "FencePointers",
+    "Rosetta",
+    "SuRFLite",
+    "CuckooFilter",
+    "BloomRFAdapter",
+]

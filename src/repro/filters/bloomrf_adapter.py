@@ -1,0 +1,77 @@
+"""bloomRF adapted to the common host-side filter API used by benchmarks."""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core import BloomRF, basic_layout
+from ..core.tuning import advise
+
+__all__ = ["BloomRFAdapter"]
+
+
+class BloomRFAdapter:
+    """``mode``:
+    * ``"basic"`` — tuning-free basic bloomRF (paper §3–§5), good to R<=2^14;
+    * ``"tuned"`` — advisor-selected layout for the given R (paper §7);
+    * ``"auto"``  — basic when R <= 2^14 else tuned.
+    """
+
+    def __init__(self, bits_per_key: float = 16.0, d: int = 64,
+                 R: float = 2 ** 14, mode: str = "auto", delta: int = 7,
+                 point_weight: float = 1.0, seed: int = 0x0B100F11,
+                 chunk: int = 1 << 18):
+        assert mode in ("basic", "tuned", "auto")
+        self.bits_per_key = bits_per_key
+        self.d = d
+        self.R = R
+        self.mode = mode
+        self.delta = delta
+        self.point_weight = point_weight
+        self.seed = seed
+        self.chunk = chunk
+
+    def build(self, keys: np.ndarray) -> None:
+        keys = np.asarray(keys, np.uint64)
+        n = max(len(keys), 1)
+        mode = self.mode
+        if mode == "auto":
+            mode = "basic" if self.R <= 2 ** 14 else "tuned"
+        if mode == "basic":
+            self.layout = basic_layout(self.d, n, self.bits_per_key,
+                                       delta=self.delta, seed=self.seed)
+        else:
+            self.layout = advise(self.d, n, int(n * self.bits_per_key),
+                                 self.R, point_weight=self.point_weight,
+                                 seed=self.seed).layout
+        self.filter = BloomRF(self.layout)
+        self.state = self.filter.build_np(keys)
+        self._point = jax.jit(self.filter.point)
+        self._range = jax.jit(self.filter.range)
+
+    def _chunked(self, fn, *arrays):
+        outs = []
+        B = len(arrays[0])
+        for s in range(0, B, self.chunk):
+            args = [jnp.asarray(a[s:s + self.chunk], self.filter.kdtype)
+                    for a in arrays]
+            outs.append(np.asarray(fn(self.state, *args)))
+        return np.concatenate(outs) if outs else np.zeros(0, bool)
+
+    def point(self, qs: np.ndarray) -> np.ndarray:
+        return self._chunked(self._point, np.asarray(qs, np.uint64))
+
+    def range(self, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+        return self._chunked(self._range, np.asarray(lo, np.uint64),
+                             np.asarray(hi, np.uint64))
+
+    def insert_more(self, keys: np.ndarray) -> None:
+        """Online insertion (the paper's Problem 2: bloomRF is online)."""
+        self.state = self.filter.insert_online(
+            self.state, jnp.asarray(keys, self.filter.kdtype))
+
+    def size_bits(self) -> int:
+        return self.layout.total_bits

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for bloomRF hot spots (probe / range-probe / insert).
+
+Each kernel has a pure-jnp oracle in ``ref.py``; ``ops.py`` is the jit'd
+dispatch wrapper.  Kernels are validated in interpret mode on CPU and target
+TPU VMEM tiling (see DESIGN.md §3 for the hardware adaptation).
+"""
+from .ops import FilterOps
+from .probe import point_probe_resident, point_probe_partitioned
+from .insert import insert_resident
+from .rangeprobe import range_probe_resident
+
+__all__ = [
+    "FilterOps",
+    "point_probe_resident",
+    "point_probe_partitioned",
+    "insert_resident",
+    "range_probe_resident",
+]

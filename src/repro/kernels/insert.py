@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: bloomRF bulk insert (filter build).
+
+The filter accumulates in VMEM across the whole grid pass via
+``input_output_aliases`` (TPU grid steps on a core are sequential, so
+read-modify-write OR needs no atomics — DESIGN.md §3).  Each grid step
+consumes one tile of keys and ORs its probe bits into the resident filter.
+The number of valid keys is a trace-time constant (shapes are static), so
+padding lanes are masked with a zero OR — they touch lane 0 harmlessly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core import BloomRF, FilterLayout
+from .ref import check_kernel_layout
+
+__all__ = ["insert_resident"]
+
+DEFAULT_TILE = 512
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _insert_kernel(keys_ref, state_in_ref, state_ref, *, filt: BloomRF,
+                   tile: int, B: int):
+    del state_in_ref  # aliased with state_ref
+    t = pl.program_id(0)
+    keys = keys_ref[...]
+    pos = jax.vmap(filt._positions_one)(keys)          # (tile, P)
+    lane = (pos >> 5).astype(jnp.int32)
+    mask = jnp.uint32(1) << (pos & 31).astype(jnp.uint32)
+    P = pos.shape[1]
+
+    def body(j, _):
+        valid = (t * tile + j // P) < B
+        l = jnp.where(valid, lane[j // P, j % P], 0)
+        m = jnp.where(valid, mask[j // P, j % P], jnp.uint32(0))
+        state_ref[l] = state_ref[l] | m
+        return 0
+
+    jax.lax.fori_loop(0, tile * P, body, 0)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4))
+def insert_resident(layout: FilterLayout, state: jax.Array, keys,
+                    tile: int = DEFAULT_TILE, interpret: bool = True):
+    """OR-accumulating bulk insert with the filter resident in VMEM."""
+    check_kernel_layout(layout)
+    filt = BloomRF(layout)
+    keys = jnp.asarray(keys, jnp.uint32)
+    B = keys.shape[0]
+    Bp = _round_up(max(B, 1), tile)
+    keys_p = jnp.pad(keys, (0, Bp - B))
+    grid = (Bp // tile,)
+    return pl.pallas_call(
+        functools.partial(_insert_kernel, filt=filt, tile=tile, B=B),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile,), lambda t: (t,)),
+                  pl.BlockSpec((layout.total_u32,), lambda t: (0,))],
+        out_specs=pl.BlockSpec((layout.total_u32,), lambda t: (0,)),
+        out_shape=jax.ShapeDtypeStruct((layout.total_u32,), jnp.uint32),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(keys_p, state)

@@ -1,0 +1,64 @@
+"""Jit'd dispatch wrappers over the Pallas kernels with XLA fallbacks.
+
+``interpret`` defaults to True off-TPU (kernel bodies execute in Python on
+CPU for validation); on a real TPU backend pass ``interpret=False``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import BloomRF, FilterLayout
+from . import probe as _probe
+from . import insert as _insert
+from . import rangeprobe as _rangeprobe
+from .ref import check_kernel_layout
+
+__all__ = ["FilterOps"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+class FilterOps:
+    """Layout-bound kernel dispatcher.
+
+    * small filters (<= ``vmem_budget_u32`` lanes) -> VMEM-resident kernels;
+    * large filters -> block-partitioned probe kernel;
+    * exact-layer layouts (range) -> XLA path (dynamic bounded scan).
+    """
+
+    def __init__(self, layout: FilterLayout, interpret: bool | None = None,
+                 vmem_budget_u32: int = 1 << 22):  # 16 MiB of lanes
+        check_kernel_layout(layout)
+        self.layout = layout
+        self.filter = BloomRF(layout)
+        self.interpret = (not _on_tpu()) if interpret is None else interpret
+        self.resident = layout.total_u32 <= vmem_budget_u32
+
+    # -- build ----------------------------------------------------------
+    def init_state(self):
+        return self.filter.init_state()
+
+    def insert(self, state, keys):
+        if self.resident:
+            return _insert.insert_resident(self.layout, state, keys,
+                                           interpret=self.interpret)
+        return self.filter.insert(state, keys)  # XLA fallback
+
+    # -- probes ----------------------------------------------------------
+    def point(self, state, keys):
+        if self.resident:
+            return _probe.point_probe_resident(self.layout, state, keys,
+                                               interpret=self.interpret)
+        return _probe.point_probe_partitioned(self.layout, state, keys,
+                                              interpret=self.interpret)
+
+    def range(self, state, lo, hi):
+        if self.resident and not self.layout.has_exact:
+            return _rangeprobe.range_probe_resident(self.layout, state, lo,
+                                                    hi,
+                                                    interpret=self.interpret)
+        return self.filter.range(state, jnp.asarray(lo, self.filter.kdtype),
+                                 jnp.asarray(hi, self.filter.kdtype))

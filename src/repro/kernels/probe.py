@@ -1,0 +1,171 @@
+"""Pallas TPU kernels: batched bloomRF point probes.
+
+Two variants (DESIGN.md §3 — HBM->VMEM adaptation of the paper's
+cache-line-word design):
+
+* ``point_probe_resident`` — the whole filter is pinned in VMEM (BlockSpec
+  maps the full state to every grid step); the grid tiles the query batch.
+  This is the fast path for per-SST/per-segment filters (a 2M-key, 16 bit/key
+  filter is 4 MiB — fits v5e VMEM comfortably).
+
+* ``point_probe_partitioned`` — HBM-scale filters: probes are pre-bucketed by
+  filter *block* (XLA argsort), padded to tile multiples, and the kernel walks
+  (tile, block) pairs with the block DMA'd into VMEM via a scalar-prefetched
+  index map.  This is the Putze-style cache partitioning re-targeted at the
+  TPU memory hierarchy.
+
+All kernel arithmetic is uint32 (d <= 32 sub-domains).  The per-key probe
+math is the *core* implementation itself, traced inside the kernel — the
+kernels add memory orchestration, not new math.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core import BloomRF, FilterLayout
+from .ref import check_kernel_layout
+
+__all__ = [
+    "point_probe_resident",
+    "point_probe_partitioned",
+    "DEFAULT_TILE",
+    "DEFAULT_BLOCK_U32",
+]
+
+DEFAULT_TILE = 512           # queries per grid step
+DEFAULT_BLOCK_U32 = 16384    # 64 KiB filter blocks for the partitioned path
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+# ---------------------------------------------------------------------------
+# resident variant
+# ---------------------------------------------------------------------------
+
+def _resident_kernel(keys_ref, state_ref, out_ref, *, filt: BloomRF):
+    keys = keys_ref[...]
+    state = state_ref[...]
+    pos = jax.vmap(filt._positions_one)(keys)          # (TILE, P)
+    lane = (pos >> 5).astype(jnp.int32)
+    sh = (pos & 31).astype(jnp.uint32)
+    bits = (state[lane] >> sh) & jnp.uint32(1)
+    out_ref[...] = jnp.all(bits == 1, axis=1)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4))
+def point_probe_resident(layout: FilterLayout, state: jax.Array, keys,
+                         tile: int = DEFAULT_TILE, interpret: bool = True):
+    """Batched point probe with the filter resident in VMEM."""
+    check_kernel_layout(layout)
+    filt = BloomRF(layout)
+    keys = jnp.asarray(keys, jnp.uint32)
+    B = keys.shape[0]
+    Bp = _round_up(max(B, 1), tile)
+    keys_p = jnp.pad(keys, (0, Bp - B))
+    grid = (Bp // tile,)
+    out = pl.pallas_call(
+        functools.partial(_resident_kernel, filt=filt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda t: (t,)),
+            pl.BlockSpec((layout.total_u32,), lambda t: (0,)),  # pinned
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda t: (t,)),
+        out_shape=jax.ShapeDtypeStruct((Bp,), jnp.bool_),
+        interpret=interpret,
+    )(keys_p, state)
+    return out[:B]
+
+
+# ---------------------------------------------------------------------------
+# partitioned variant (HBM-scale filters)
+# ---------------------------------------------------------------------------
+
+def _partitioned_kernel(tile_block, lane_ref, sh_ref, block_ref, out_ref, *,
+                        block_u32: int):
+    del tile_block  # consumed by the index maps
+    lane = lane_ref[...]                      # global lane ids, -1 = padding
+    sh = sh_ref[...]
+    local = jnp.where(lane < 0, 0, lane % block_u32).astype(jnp.int32)
+    word = block_ref[...][local]
+    bit = (word >> sh.astype(jnp.uint32)) & jnp.uint32(1)
+    out_ref[...] = jnp.where(lane < 0, jnp.uint32(1), bit)  # pad -> neutral
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4, 5))
+def point_probe_partitioned(layout: FilterLayout, state: jax.Array, keys,
+                            tile: int = DEFAULT_TILE,
+                            block_u32: int = DEFAULT_BLOCK_U32,
+                            interpret: bool = True):
+    """Batched point probe for filters too large for VMEM.
+
+    XLA side: expand keys to probes, sort probes by filter block, pad each
+    block's probe list to a tile multiple.  Pallas side: walk tiles with the
+    owning block scalar-prefetch-mapped into VMEM.  Probe bits are then
+    AND-reduced per key (segment reduction) back in XLA.
+    """
+    check_kernel_layout(layout)
+    filt = BloomRF(layout)
+    keys = jnp.asarray(keys, jnp.uint32)
+    B = keys.shape[0]
+    U = layout.total_u32
+    nblocks = _round_up(U, block_u32) // block_u32
+    state_p = jnp.pad(state, (0, nblocks * block_u32 - U))
+
+    pos = jax.vmap(filt._positions_one)(keys)           # (B, P)
+    P = pos.shape[1]
+    lane = (pos >> 5).astype(jnp.int32).reshape(-1)     # (B*P,)
+    sh = (pos & 31).astype(jnp.int32).reshape(-1)
+    keyid = jnp.repeat(jnp.arange(B, dtype=jnp.int32), P)
+    blk = lane // block_u32
+
+    # sort probes by block; pad so no tile spans two blocks
+    order = jnp.argsort(blk)
+    lane_s, sh_s, key_s, blk_s = lane[order], sh[order], keyid[order], blk[order]
+    nprobe = B * P
+    # per-probe destination slot: block_start_padded + rank_within_block
+    counts = jnp.bincount(blk_s, length=nblocks)
+    padded_counts = ((counts + tile - 1) // tile) * tile
+    starts = jnp.concatenate([jnp.zeros(1, padded_counts.dtype),
+                              jnp.cumsum(padded_counts)])[:-1]
+    rank = jnp.arange(nprobe) - jnp.cumsum(
+        jnp.concatenate([jnp.zeros(1, counts.dtype), counts]))[:-1][blk_s]
+    slot = starts[blk_s] + rank
+    cap = nprobe + nblocks * tile               # worst-case padded length
+    capr = _round_up(cap, tile)
+    lane_b = jnp.full(capr, -1, jnp.int32).at[slot].set(lane_s)
+    sh_b = jnp.zeros(capr, jnp.int32).at[slot].set(sh_s)
+    key_b = jnp.full(capr, B, jnp.int32).at[slot].set(key_s)  # B = scrap key
+    # block id per tile (scalar prefetch)
+    tile_block = jnp.where(lane_b[::tile] < 0, 0,
+                           lane_b[::tile] // block_u32).astype(jnp.int32)
+
+    ntiles = capr // tile
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(ntiles,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda t, tb: (t,)),
+            pl.BlockSpec((tile,), lambda t, tb: (t,)),
+            pl.BlockSpec((block_u32,), lambda t, tb: (tb[t],)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda t, tb: (t,)),
+    )
+    bits = pl.pallas_call(
+        functools.partial(_partitioned_kernel, block_u32=block_u32),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((capr,), jnp.uint32),
+        interpret=interpret,
+    )(tile_block, lane_b, sh_b, state_p)
+
+    # AND-reduce per key: min of bits (1 = set) over each key's probes
+    acc = jnp.ones(B + 1, jnp.uint32).at[key_b].min(bits)
+    return acc[:B] == 1

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: batched bloomRF range probes.
+
+The two-path dyadic range lookup (core ``_range_one``) is traced *inside* the
+kernel over a query tile, with the filter resident in VMEM.  The core math is
+branch-free (live/dead masks instead of early exits), so the kernel is pure
+vector work over the tile: per layer, <= 4 word loads + 2 covering bits per
+query, exactly the paper's access bound.
+
+Layout restrictions for the kernel path: no exact segment (its bounded lane
+scan is a dynamic while_loop — fine for XLA, not for a TPU kernel); everything
+else (variable Δ, replicas, multi-segment) is supported.  Exact-layer layouts
+fall back to the XLA path in ``ops.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core import BloomRF, FilterLayout
+from .ref import check_kernel_layout
+
+__all__ = ["range_probe_resident"]
+
+DEFAULT_TILE = 512
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _range_kernel(lo_ref, hi_ref, state_ref, out_ref, *, filt: BloomRF):
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    state = state_ref[...]
+    out_ref[...] = jax.vmap(functools.partial(filt._range_one, state))(lo, hi)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4, 5))
+def range_probe_resident(layout: FilterLayout, state: jax.Array, lo, hi,
+                         tile: int = DEFAULT_TILE, interpret: bool = True):
+    check_kernel_layout(layout)
+    if layout.has_exact:
+        raise ValueError("exact-layer layouts use the XLA path (ops.py)")
+    filt = BloomRF(layout)
+    lo = jnp.asarray(lo, jnp.uint32)
+    hi = jnp.asarray(hi, jnp.uint32)
+    B = lo.shape[0]
+    Bp = _round_up(max(B, 1), tile)
+    lo_p = jnp.pad(lo, (0, Bp - B))
+    hi_p = jnp.pad(hi, (0, Bp - B))
+    grid = (Bp // tile,)
+    out = pl.pallas_call(
+        functools.partial(_range_kernel, filt=filt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda t: (t,)),
+            pl.BlockSpec((tile,), lambda t: (t,)),
+            pl.BlockSpec((layout.total_u32,), lambda t: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda t: (t,)),
+        out_shape=jax.ShapeDtypeStruct((Bp,), jnp.bool_),
+        interpret=interpret,
+    )(lo_p, hi_p, state)
+    return out[:B]

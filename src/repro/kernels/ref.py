@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+The kernels deliberately *reuse* the core bloomRF math (``repro.core``), so
+the oracle is the core filter evaluated directly — kernel results must match
+bit-for-bit, not just approximately.  Kernels operate on 32-bit sub-domains
+(d <= 32): the distributed deployment range-partitions a 64-bit key space by
+its top bits across shards, keeping all TPU lane arithmetic native uint32
+(DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import BloomRF, FilterLayout
+
+
+def check_kernel_layout(layout: FilterLayout) -> None:
+    if layout.d > 32:
+        raise ValueError(
+            "TPU kernels operate on 32-bit sub-domains; range-partition the "
+            "64-bit key space across shards first (DESIGN.md §3)")
+
+
+def point_ref(layout: FilterLayout, state: jax.Array, keys: jax.Array):
+    check_kernel_layout(layout)
+    return BloomRF(layout).point(state, keys)
+
+
+def range_ref(layout: FilterLayout, state: jax.Array, lo: jax.Array,
+              hi: jax.Array):
+    check_kernel_layout(layout)
+    return BloomRF(layout).range(state, lo, hi)
+
+
+def insert_ref(layout: FilterLayout, state: jax.Array, keys: jax.Array):
+    check_kernel_layout(layout)
+    return BloomRF(layout).insert(state, keys)
+
+
+def positions_ref(layout: FilterLayout, keys: jax.Array):
+    """(B, P) bit positions probed/set per key (kernel-probe decomposition)."""
+    check_kernel_layout(layout)
+    f = BloomRF(layout)
+    return jax.vmap(f._positions_one)(jnp.asarray(keys, f.kdtype))

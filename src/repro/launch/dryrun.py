@@ -1,0 +1,295 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ the dry-run (and ONLY the dry-run) fakes 512 host devices so
+# jax.make_mesh can build the production meshes; must precede any jax import.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the jitted step (full train step incl. AdamW update, or
+     prefill / decode) with production in/out shardings,
+  2. ``.lower().compile()`` against ShapeDtypeStruct inputs (no allocation),
+  3. records ``memory_analysis`` / ``cost_analysis`` and the collective-op
+     byte totals parsed from the optimized HLO,
+  4. derives the three roofline terms (compute / memory / collective) for
+     TPU v5e constants (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI).
+
+Results stream to JSON (one record per cell) consumed by
+``benchmarks/roofline_report.py`` and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out results/dryrun.json [--smoke]
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCH_NAMES, get_config, shape_applicable
+from ..dist.sharding import (batch_axes_for, make_shardings,
+                             mesh_axis_sizes)
+from ..models import SHAPES, get_model
+from ..models.act import activation_mesh, unrolled_scans
+from ..train.optimizer import OptConfig, adamw_update
+from .hlo_cost import analyze_hlo
+from .mesh import make_production_mesh
+
+# TPU v5e roofline constants
+PEAK_FLOPS = 197e12         # bf16 / chip
+HBM_BW = 819e9              # bytes/s / chip
+ICI_BW = 50e9               # bytes/s / link
+
+_DT_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+
+# ---------------------------------------------------------------------------
+# HLO parsing
+# ---------------------------------------------------------------------------
+
+def _type_bytes(tstr: str) -> int:
+    """bytes of an HLO type string: 'bf16[8,16]{1,0}' or '(f32[2], u32[])'."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", tstr):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DT_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DT_BYTES[dt]
+    return total
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?([%\w\.\-]+)\s*=\s*((?:\([^=]*?\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s+([\w\-]+)\(")
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Sum operand bytes of collective ops in post-optimization HLO.
+
+    Returns {"total": bytes, per-op-kind breakdown}.  Async pairs are counted
+    on the -start op only.  Shapes in partitioned HLO are per-device.
+    """
+    defs: dict = {}
+    pending = []
+    for line in hlo.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, tstr, op = m.groups()
+        defs[name] = _type_bytes(tstr)
+        base = op[:-6] if op.endswith("-start") else op
+        if op.endswith("-done"):
+            continue
+        if base in _COLLECTIVES:
+            args = line.split(op + "(", 1)[1].split(")", 1)[0]
+            operands = [a.strip() for a in args.split(",") if
+                        a.strip().startswith("%") or
+                        a.strip().split(".")[0] in ("", ) or True]
+            pending.append((base, [a.strip() for a in args.split(",")]))
+    out = {"total": 0}
+    for base, operands in pending:
+        b = sum(defs.get(o, 0) for o in operands)
+        out["total"] += b
+        out[base] = out.get(base, 0) + b
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def param_sds(model):
+    from ..models.params import P as PLeaf
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+        model.table(), is_leaf=lambda x: isinstance(x, PLeaf))
+
+
+def opt_sds(psds):
+    zeros = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), psds)
+    return {"m": zeros,
+            "v": jax.tree.map(lambda s: s, zeros),
+            "count": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def build_cell(model, mesh, shape):
+    """Returns (fn, example_args_sds, in_shardings, out_shardings, donate)."""
+    sh = make_shardings(model, mesh, shape)
+    psds = param_sds(model)
+    batch_sds = model.input_specs(shape)
+    if shape.kind == "train":
+        opt_cfg = OptConfig()
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+            params, opt_state, om = adamw_update(opt_cfg, grads, opt_state,
+                                                 params)
+            return params, opt_state, {"loss": loss, **om}
+
+        osds = opt_sds(psds)
+        osh = {"m": sh.params, "v": jax.tree.map(lambda x: x, sh.params),
+               "count": sh.out_scalar}
+        metr = {"loss": sh.out_scalar, "lr": sh.out_scalar,
+                "grad_norm": sh.out_scalar}
+        return (train_step, (psds, osds, batch_sds),
+                (sh.params, osh, sh.batch), (sh.params, osh, metr), (0, 1))
+    from jax.sharding import NamedSharding, PartitionSpec as PS
+    from ..dist.sharding import batch_axes_for, _axes_size
+    msz = mesh_axis_sizes(mesh)
+    ba = batch_axes_for(mesh)
+    vocab_ax = "model" if model.cfg.vocab % msz.get("model", 1) == 0 else None
+    if shape.kind == "prefill":
+        logits_sh = NamedSharding(mesh, PS(ba, None, vocab_ax))
+        return (model.prefill, (psds, batch_sds),
+                (sh.params, sh.batch), (logits_sh, sh.cache), ())
+    # decode
+    if shape.batch < _axes_size(msz, ba):
+        ba = None
+    csds = model.cache_specs(shape)
+    logits_sh = NamedSharding(mesh, PS(ba, None, vocab_ax))
+    return (model.decode, (psds, csds, batch_sds),
+            (sh.params, sh.cache, sh.batch), (logits_sh, sh.cache), (1,))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, smoke: bool) -> dict:
+    cfg = get_config(arch, smoke=smoke)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "multi" if multi_pod else "single",
+           "kind": shape.kind, "status": "skipped"}
+    if not shape_applicable(cfg, shape):
+        rec["note"] = "long_500k skipped for full-attention arch (DESIGN.md)"
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(mesh.devices.shape))
+    model_axis = mesh_axis_sizes(mesh)["model"]
+    if (shape.kind != "train" and cfg.n_kv_heads and
+            cfg.n_kv_heads % model_axis != 0 and
+            cfg.family in ("dense", "moe", "vlm", "hybrid")):
+        # pad cached KV heads so the cache shards over the model axis
+        cfg = dataclasses.replace(cfg, kv_cache_pad_heads=model_axis)
+    model = get_model(cfg)
+    t0 = time.time()
+    fn, args, in_sh, out_sh, donate = build_cell(model, mesh, shape)
+    jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                  donate_argnums=donate)
+    with activation_mesh(mesh, batch_axes_for(mesh)):
+        lowered = jfn.lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    # raw XLA cost analysis (NOT loop-trip-multiplied — kept for reference)
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes",
+                                            None),
+        }
+    except Exception:
+        mem_rec = None
+
+    # loop-trip-aware accounting over the optimized HLO (launch/hlo_cost.py)
+    hc = analyze_hlo(compiled.as_text())
+    flops_dev = hc.flops
+    bytes_dev = hc.bytes
+    terms = {
+        "compute_s": flops_dev / PEAK_FLOPS,
+        "memory_s": bytes_dev / HBM_BW,
+        "collective_s": hc.collective_bytes / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    rec.update({
+        "status": "ok", "chips": chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_device": flops_dev, "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": hc.collective_bytes,
+        "collective_breakdown": hc.collective_breakdown,
+        "while_trips": hc.while_trips,
+        "xla_cost_analysis": {"flops": float(ca.get("flops", 0.0)),
+                              "bytes_accessed":
+                              float(ca.get("bytes accessed", 0.0))},
+        "memory_analysis": mem_rec,
+        "roofline_terms_s": terms, "dominant": dominant,
+    })
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs (CI)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = ARCH_NAMES if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    records = []
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                tag = f"{arch} x {shape_name} x {'multi' if multi else 'single'}"
+                try:
+                    rec = run_cell(arch, shape_name, multi, args.smoke)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": "multi" if multi else "single",
+                           "status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                records.append(rec)
+                if rec["status"] == "ok":
+                    t = rec["roofline_terms_s"]
+                    print(f"[ok] {tag}: compile={rec['compile_s']:.1f}s "
+                          f"compute={t['compute_s']:.3e}s "
+                          f"mem={t['memory_s']:.3e}s "
+                          f"coll={t['collective_s']:.3e}s "
+                          f"dominant={rec['dominant']}", flush=True)
+                else:
+                    print(f"[{rec['status']}] {tag}"
+                          f" {rec.get('error', rec.get('note', ''))}",
+                          flush=True)
+                if args.out:
+                    with open(args.out, "w") as fh:
+                        json.dump(records, fh, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_err = sum(r["status"] == "error" for r in records)
+    print(f"dry-run: {n_ok} ok, {n_err} errors, "
+          f"{len(records) - n_ok - n_err} skipped")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

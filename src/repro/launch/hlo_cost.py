@@ -1,0 +1,363 @@
+"""Trip-count-aware cost accounting over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each op once — while-loop bodies
+(lax.scan over layers / KV blocks / SSD chunks) are NOT multiplied by their
+trip counts, so scanned models look ~L× cheaper than they are.  Full
+unrolling fixes that but is unaffordable to compile on one host core for 72
+dry-run cells.  This module instead walks the HLO call graph:
+
+* parse every computation and its ops (symbol table of result shapes);
+* recover while-loop trip counts from the loop condition's comparison
+  constant (scan lowers to ``compare(iter, const)``);
+* propagate multipliers ENTRY -> called computations (while bodies get
+  parent_mult × trips; call/fusion/cond bodies get parent_mult);
+* FLOPs: dot ops count 2·numel(result)·contraction_size; elementwise math
+  counts numel(result); everything scaled by the computation's multiplier.
+* bytes: per *top-level* op (fusion bodies excluded — their traffic is the
+  fusion's operands/results): operands + result, with slicing ops counted at
+  slice size (matching XLA's optimistic bytes-accessed convention);
+* collective bytes: operand bytes of all-reduce/all-gather/reduce-scatter/
+  all-to-all/collective-permute × multiplier (async -start counted once).
+
+Validated against ``cost_analysis`` on small unrolled modules
+(tests/test_dryrun.py::test_hlo_cost_matches_unrolled).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DT_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "power",
+    "select", "compare", "and", "or", "xor", "convert", "floor", "ceil",
+    "sign", "cosine", "sine", "logistic", "expm1", "log1p", "clamp",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "remainder", "atan2", "reduce", "exponential-minus-one",
+}
+
+_SLICELIKE = {"dynamic-slice", "gather", "slice", "dynamic-update-slice",
+              "scatter", "pad", "concatenate", "reshape", "transpose",
+              "broadcast", "iota", "reverse"}
+
+_FREE = {"parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+         "after-all", "custom-call", "partition-id", "replica-id",
+         "rng-get-and-update-state", "get-dimension-size", "domain",
+         "opt-barrier", "conditional", "while", "call", "fusion",
+         "async-start", "async-update", "async-done"}
+
+
+def _shape_numel_bytes(tstr: str):
+    total_b = 0
+    total_n = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", tstr):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DT_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total_n += n
+        total_b += n * _DT_BYTES[dt]
+    return total_n, total_b
+
+
+@dataclass
+class _Op:
+    name: str
+    opcode: str
+    tstr: str
+    operands: list
+    line: str
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: list = field(default_factory=list)
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_breakdown: dict = field(default_factory=dict)
+    while_trips: dict = field(default_factory=dict)
+
+
+_COMP_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"((?:\(.*?\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s+([\w\-]+)\((.*)$")
+
+
+def _parse_module(hlo: str):
+    comps: dict = {}
+    cur = None
+    entry = None
+    for line in hlo.splitlines():
+        mc = _COMP_RE.match(line.strip()) if "{" in line and "->" in line else None
+        # header lines have no " = " assignment (note: /*index=N*/ comments
+        # inside tuple types do contain bare '=')
+        if mc and " = " not in line.split("{")[0]:
+            cur = _Computation(mc.group(1))
+            comps[cur.name] = cur
+            if line.strip().startswith("ENTRY"):
+                entry = cur.name
+            continue
+        mo = _OP_RE.match(line)
+        if mo and cur is not None:
+            name, tstr, opcode, rest = mo.groups()
+            args = rest.split(")", 1)[0]
+            operands = [a.strip().lstrip("%") for a in args.split(",")
+                        if a.strip()]
+            cur.ops.append(_Op(name, opcode, tstr, operands, line))
+    return comps, entry
+
+
+def _attr(line: str, key: str):
+    m = re.search(key + r"=%?([\w\.\-]+)", line)
+    return m.group(1) if m else None
+
+
+def _attr_list(line: str, key: str):
+    m = re.search(key + r"=\{([^}]*)\}", line)
+    if not m:
+        return []
+    return [x.strip() for x in m.group(1).split(",") if x.strip()]
+
+
+def _trip_count(comps: dict, cond_name: str):
+    """Trip count of a scan-style loop: the integer constant the iteration
+    counter is compared against.  The compare may be fused, so we take the
+    largest integer constant in the (tiny) condition computation."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", op.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _fusion_io_bytes(comps, body_name, operands, shape_of):
+    """Traffic of a fusion op, looking inside the fused computation:
+    a parameter consumed only by slice-like ops is charged at the slice
+    result size (scan xs slicing!), and a root dynamic-update-slice charges
+    the update size instead of the full (aliased) buffer."""
+    body = comps.get(body_name)
+    if body is None:
+        return sum(shape_of.get(o, (0, 0))[1] for o in operands), None
+    pname_by_idx = {}
+    for bop in body.ops:
+        if bop.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", bop.line)
+            if m:
+                pname_by_idx[int(m.group(1))] = bop.name
+    param_partial = {}   # param name -> accumulated slice bytes
+    param_full = set()
+    pnames = set(pname_by_idx.values())
+    # aliases: bitcast/reshape/transpose/copy/convert of a param read the
+    # same logical bytes (TPU's ConvertMover folds the convert-around-DUS
+    # pattern XLA:CPU leaves behind — model the folded form)
+    _TRANSPARENT = ("bitcast", "reshape", "transpose", "copy", "convert")
+    alias_of = {}
+    for bop in body.ops:
+        if bop.opcode in _TRANSPARENT and bop.operands:
+            src = alias_of.get(bop.operands[0], bop.operands[0])
+            if src in pnames:
+                alias_of[bop.name] = src
+    root = None
+    ops_by_name = {bop.name: bop for bop in body.ops}
+    for bop in body.ops:
+        if bop.line.strip().startswith("ROOT"):
+            root = bop
+        if bop.opcode in _TRANSPARENT:
+            continue
+        for o in bop.operands:
+            o = alias_of.get(o, o)
+            if o not in pnames:
+                continue
+            if bop.opcode in ("dynamic-slice", "slice", "gather"):
+                param_partial[o] = param_partial.get(o, 0) + \
+                    shape_of.get(bop.name, (0, 0))[1]
+            elif bop.opcode == "dynamic-update-slice" and \
+                    bop.operands and alias_of.get(bop.operands[0],
+                                                  bop.operands[0]) == o:
+                pass  # aliased buffer passthrough; charged via the update
+            else:
+                param_full.add(o)
+    # unwrap the root through transparent ops to find an in-place DUS
+    while root is not None and root.opcode in _TRANSPARENT and root.operands:
+        root = ops_by_name.get(root.operands[0])
+    total_in = 0
+    for i, o in enumerate(operands):
+        pname = pname_by_idx.get(i)
+        full = shape_of.get(o, (0, 0))[1]
+        if pname is None:
+            total_in += full
+        elif pname in param_full:
+            total_in += full
+        else:
+            total_in += min(param_partial.get(pname, full), full)
+    out_override = None
+    if root is not None and root.opcode == "dynamic-update-slice" and \
+            len(root.operands) > 1:
+        upd = root.operands[1]
+        upd_b = shape_of.get(upd, None)
+        if upd_b is None and upd in pname_by_idx.values():
+            pass
+        out_override = 2 * (shape_of.get(upd, (0, 0))[1] or 0)
+        if out_override == 0:
+            # update defined inside the fusion body
+            out_override = 2 * shape_of.get(root.operands[1], (0, 0))[1]
+    return total_in, out_override
+
+
+def analyze_hlo(hlo: str) -> HloCost:
+    comps, entry = _parse_module(hlo)
+    if entry is None:
+        # fall back: largest computation
+        entry = max(comps, key=lambda c: len(comps[c].ops)) if comps else None
+    cost = HloCost()
+    if entry is None:
+        return cost
+
+    # compute multipliers and fused-body marking via BFS
+    mult = {entry: 1.0}
+    fused_body: set = set()
+    order = [entry]
+    seen = {entry}
+    qi = 0
+    while qi < len(order):
+        cname = order[qi]
+        qi += 1
+        comp = comps[cname]
+        for op in comp.ops:
+            callees = []
+            if op.opcode == "while":
+                body = _attr(op.line, "body")
+                cond = _attr(op.line, "condition")
+                trips = _trip_count(comps, cond)
+                cost.while_trips[op.name] = trips
+                if body in comps:
+                    callees.append((body, mult[cname] * trips, False))
+                if cond in comps:
+                    callees.append((cond, mult[cname], False))
+            elif op.opcode == "fusion":
+                body = _attr(op.line, "calls")
+                if body in comps:
+                    callees.append((body, mult[cname], True))
+            elif op.opcode in ("call", "async-start"):
+                body = _attr(op.line, "to_apply") or _attr(op.line, "calls")
+                if body in comps:
+                    callees.append((body, mult[cname], False))
+            elif op.opcode == "conditional":
+                for key in ("true_computation", "false_computation"):
+                    body = _attr(op.line, key)
+                    if body in comps:
+                        callees.append((body, mult[cname], False))
+                for body in _attr_list(op.line, "branch_computations"):
+                    body = body.lstrip("%")
+                    if body in comps:
+                        callees.append((body, mult[cname], False))
+            elif op.opcode in ("reduce", "scatter", "sort", "map",
+                               "reduce-window", "select-and-scatter"):
+                body = _attr(op.line, "to_apply")
+                if body in comps:
+                    callees.append((body, 0.0, True))  # tiny scalar lambdas
+            for body, m, fused in callees:
+                mult[body] = max(mult.get(body, 0.0), m)
+                if fused:
+                    fused_body.add(body)
+                if body not in seen:
+                    seen.add(body)
+                    order.append(body)
+
+    # symbol table (result bytes + type string per op name, module-wide)
+    shape_of: dict = {}
+    tstr_of: dict = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            shape_of[op.name] = _shape_numel_bytes(op.tstr)
+            tstr_of[op.name] = op.tstr
+
+    for cname in order:
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        comp = comps[cname]
+        in_fused = cname in fused_body
+        for op in comp.ops:
+            numel, rbytes = shape_of.get(op.name, (0, 0))
+            oc = op.opcode
+            base = oc[:-6] if oc.endswith("-start") else oc
+            # ---- flops (counted inside fusions too)
+            if oc == "dot":
+                cdims = _attr_list(op.line, "lhs_contracting_dims")
+                lhs = op.operands[0] if op.operands else None
+                k = 1
+                if lhs is not None:
+                    lm = re.search(r"\w+\[([\d,]*)\]", tstr_of.get(lhs, ""))
+                    if lm and lm.group(1):
+                        dims = [int(d) for d in lm.group(1).split(",")]
+                        for c in cdims:
+                            ci = int(c)
+                            if ci < len(dims):
+                                k *= dims[ci]
+                cost.flops += m * 2.0 * numel * k
+            elif oc == "convolution":
+                cost.flops += m * 2.0 * numel * 32  # rare in this zoo
+            elif base in _ELEMENTWISE:
+                cost.flops += m * numel
+            # ---- bytes (top-level ops only; fused bodies excluded)
+            if not in_fused and oc not in _FREE:
+                if oc in _SLICELIKE or base in _ELEMENTWISE or \
+                        oc in ("dot", "convolution", "copy", "reduce",
+                               "fusion") or base in _COLLECTIVES:
+                    opnd = 0
+                    if oc in ("dynamic-slice", "gather", "slice"):
+                        opnd = rbytes            # reads slice-sized data
+                    elif oc == "dynamic-update-slice":
+                        upd = shape_of.get(op.operands[1], (0, 0))[1] \
+                            if len(op.operands) > 1 else rbytes
+                        opnd = 2 * upd           # read+write the update
+                        rbytes = 0
+                    else:
+                        opnd = sum(shape_of.get(o, (0, 0))[1]
+                                   for o in op.operands)
+                    cost.bytes += m * (opnd + rbytes)
+            # fusion op itself moves its (utilized) operands + result
+            if not in_fused and oc == "fusion":
+                opnd, out_override = _fusion_io_bytes(
+                    comps, _attr(op.line, "calls"), op.operands, shape_of)
+                cost.bytes += m * (opnd + (rbytes if out_override is None
+                                           else out_override))
+            # ---- collectives
+            if base in _COLLECTIVES and not oc.endswith("-done"):
+                b = sum(shape_of.get(o, (0, 0))[1] for o in op.operands)
+                if b == 0:
+                    b = rbytes
+                cost.collective_bytes += m * b
+                cost.collective_breakdown[base] = \
+                    cost.collective_breakdown.get(base, 0.0) + m * b
+    return cost

@@ -1,0 +1,111 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dump the top byte/flop-contributing HLO ops for one dry-run cell —
+the 'profile' of the CPU-only perf loop (EXPERIMENTS.md §Perf).
+
+Usage: PYTHONPATH=src python -m repro.launch.profile_cell --arch X \
+    --shape train_4k [--multi] [--top 25]
+"""
+import argparse
+
+import jax
+
+from ..configs import get_config
+from ..dist.sharding import batch_axes_for
+from ..models import SHAPES, get_model
+from ..models.act import activation_mesh
+from . import dryrun as dr
+from .hlo_cost import (_COLLECTIVES, _ELEMENTWISE, _FREE, _SLICELIKE, _attr,
+                       _parse_module, _shape_numel_bytes, _trip_count)
+from .mesh import make_production_mesh
+
+
+def top_contributors(hlo: str, top: int = 25):
+    comps, entry = _parse_module(hlo)
+    mult = {entry: 1.0}
+    fused = set()
+    order = [entry]
+    seen = {entry}
+    qi = 0
+    while qi < len(order):
+        c = order[qi]
+        qi += 1
+        for op in comps[c].ops:
+            cal = []
+            if op.opcode == "while":
+                b = _attr(op.line, "body")
+                cd = _attr(op.line, "condition")
+                t = _trip_count(comps, cd)
+                if b in comps:
+                    cal.append((b, mult[c] * t, False))
+                if cd in comps:
+                    cal.append((cd, mult[c], False))
+            elif op.opcode == "fusion":
+                b = _attr(op.line, "calls")
+                if b in comps:
+                    cal.append((b, mult[c], True))
+            elif op.opcode in ("call", "async-start"):
+                b = _attr(op.line, "to_apply") or _attr(op.line, "calls")
+                if b in comps:
+                    cal.append((b, mult[c], False))
+            for b, m, f in cal:
+                mult[b] = max(mult.get(b, 0), m)
+                if f:
+                    fused.add(b)
+                if b not in seen:
+                    seen.add(b)
+                    order.append(b)
+    shape_of = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            shape_of[op.name] = _shape_numel_bytes(op.tstr)
+    rows = []
+    for cname in order:
+        m = mult.get(cname, 0)
+        if m <= 0 or cname in fused:
+            continue
+        for op in comps[cname].ops:
+            numel, rb = shape_of.get(op.name, (0, 0))
+            oc = op.opcode
+            if oc in _FREE and oc != "fusion":
+                continue
+            if oc in ("dynamic-slice", "gather", "slice"):
+                b = rb
+            elif oc == "dynamic-update-slice":
+                upd = shape_of.get(op.operands[1], (0, 0))[1] \
+                    if len(op.operands) > 1 else rb
+                b = 2 * upd
+            else:
+                b = sum(shape_of.get(o, (0, 0))[1] for o in op.operands) + rb
+            rows.append((m * b, m, oc, op.line.strip()[:150]))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi)
+    model = get_model(cfg)
+    fn, fargs, in_sh, out_sh, donate = dr.build_cell(model, mesh, shape)
+    jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                  donate_argnums=donate)
+    with activation_mesh(mesh, batch_axes_for(mesh)):
+        hlo = jfn.lower(*fargs).compile().as_text()
+    total = 0.0
+    rows = top_contributors(hlo, args.top)
+    for b, m, oc, line in rows:
+        print(f"{b/1e9:10.1f} GB x{m:6.0f} {oc:22s} {line}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Logical activation-sharding constraints (MaxText-style axis rules).
+
+Model code annotates activations with *logical* axes ("batch", "model",
+None); when a launcher installs an activation mesh (``activation_mesh``),
+the annotations become ``with_sharding_constraint`` calls — including uneven
+shardings (e.g. 40 heads over a 16-way model axis), which GSPMD pads.
+Without an installed mesh the annotations are no-ops, so unit tests and
+single-device paths are unaffected.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+__all__ = ["activation_mesh", "constrain", "unrolled_scans", "scan",
+           "legacy_f32_internals", "legacy_f32"]
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("act_mesh",
+                                                      default=None)
+_UNROLL: contextvars.ContextVar = contextvars.ContextVar("unroll_scans",
+                                                         default=False)
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh, batch_axes):
+    """Install (mesh, batch_axes) for the duration of a trace/lowering."""
+    token = _CTX.set((mesh, batch_axes))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+@contextlib.contextmanager
+def unrolled_scans():
+    """Fully unroll every model scan (layers / KV blocks / SSD chunks).
+
+    Used by the dry-run so ``compiled.cost_analysis()`` and the collective-op
+    parse see every repetition explicitly — XLA's cost analysis does not
+    multiply while-loop bodies by their trip counts."""
+    token = _UNROLL.set(True)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(token)
+
+
+def scan(f, init, xs, **kw):
+    """lax.scan that honors the dry-run unroll context."""
+    import jax
+
+    if _UNROLL.get():
+        kw = dict(kw, unroll=True)
+    return jax.lax.scan(f, init, xs, **kw)
+
+
+_LEGACY_F32: contextvars.ContextVar = contextvars.ContextVar(
+    "legacy_f32", default=False)
+
+
+@contextlib.contextmanager
+def legacy_f32_internals():
+    """Ablation toggle (§Perf iteration 1 baseline): full-f32 norm/rope/SSD
+    internals — materializes f32 activation-sized temporaries."""
+    token = _LEGACY_F32.set(True)
+    try:
+        yield
+    finally:
+        _LEGACY_F32.reset(token)
+
+
+def legacy_f32() -> bool:
+    return _LEGACY_F32.get()
+
+
+def constrain(x, logical: tuple):
+    """logical entries: "batch" | "model" | None per dim of ``x``."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, batch_axes = ctx
+    spec = tuple(batch_axes if a == "batch" else
+                 ("model" if a == "model" else None) for a in logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, PS(*spec)))
+
+
+def current_mesh():
+    """(mesh, batch_axes) when a launcher installed one, else None."""
+    return _CTX.get()

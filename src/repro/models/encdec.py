@@ -1,0 +1,268 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a stub per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, enc_seq, d_model).  Positions use sinusoidal
+embeddings computed on the fly for both stacks (whisper's decoder uses a
+learned table capped at 448; a computed table keeps the params independent of
+the 32k decode shape — recorded in DESIGN.md §5.3).
+
+Blocks follow whisper: pre-LayerNorm (with bias), biased attention
+projections, GELU MLP; decoder adds cross-attention over encoder output
+(cross KV computed once at prefill and cached).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from .act import scan as _act_scan
+from .act import constrain
+from .config import ModelConfig, Shape
+from .layers import KVCache, cast, flash_attention, gelu_mlp
+from .params import P, init_params, pspecs
+from .transformer import DenseModel, cross_entropy, stack_layers
+
+__all__ = ["EncDecModel"]
+
+
+def layernorm(x, p, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y.astype(x.dtype) * p["w"].astype(x.dtype) +
+            p["b"].astype(x.dtype))
+
+
+def _ln_table(D):
+    return {"w": P((D,), (None,), "ones"), "b": P((D,), (None,), "zeros")}
+
+
+def _attn_table(cfg: ModelConfig):
+    D, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    return {
+        "wq": P((D, H, hd), ("embed", "heads", None)),
+        "wk": P((D, H, hd), ("embed", "heads", None)),
+        "wv": P((D, H, hd), ("embed", "heads", None)),
+        "wo": P((H, hd, D), ("heads", None, "embed")),
+        "bq": P((H, hd), ("heads", None), "zeros"),
+        "bv": P((H, hd), ("heads", None), "zeros"),
+        "bo": P((D,), (None,), "zeros"),
+    }
+
+
+def _mlp_table(cfg: ModelConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "w_in": P((D, F), ("embed", "mlp")),
+        "b_in": P((F,), ("mlp",), "zeros"),
+        "w_out": P((F, D), ("mlp", "embed")),
+        "b_out": P((D,), (None,), "zeros"),
+    }
+
+
+def sinusoid_positions(S, D, offset=0):
+    pos = offset + jnp.arange(S, dtype=jnp.float32)
+    half = D // 2
+    freq = jnp.exp(-math.log(10000.0) *
+                   jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _mha(p, cfg, xq, xkv=None, *, causal, q_offset=0, kv_len=None,
+         kv_override=None):
+    """Whisper-flavoured MHA (no rope, biased q/v/o projections)."""
+    H, hd = cfg.n_heads, cfg.hd
+    dt = xq.dtype
+    B, Sq = xq.shape[:2]
+    q = jnp.einsum("bsd,dhe->bshe", xq, cast(p["wq"], dt)) + cast(p["bq"], dt)
+    if kv_override is not None:
+        k, v = kv_override
+    else:
+        src = xq if xkv is None else xkv
+        k = jnp.einsum("bsd,dhe->bshe", src, cast(p["wk"], dt))
+        v = jnp.einsum("bsd,dhe->bshe", src, cast(p["wv"], dt)) + \
+            cast(p["bv"], dt)
+    qg = q.reshape(B, Sq, H, 1, hd)
+    out = flash_attention(qg, k, v, causal=causal, q_offset=q_offset,
+                          kv_len=kv_len)
+    out = out.reshape(B, Sq, H, hd)
+    y = jnp.einsum("bshe,hed->bsd", out, cast(p["wo"], dt)) + cast(p["bo"], dt)
+    return y, (k, v)
+
+
+class EncDecModel(DenseModel):
+    family = "encdec"
+
+    def table(self) -> dict:
+        cfg = self.cfg
+        enc_block = {
+            "attn": _attn_table(cfg), "mlp": _mlp_table(cfg),
+            "ln1": _ln_table(cfg.d_model), "ln2": _ln_table(cfg.d_model),
+        }
+        dec_block = {
+            "attn": _attn_table(cfg), "xattn": _attn_table(cfg),
+            "mlp": _mlp_table(cfg),
+            "ln1": _ln_table(cfg.d_model), "lnx": _ln_table(cfg.d_model),
+            "ln2": _ln_table(cfg.d_model),
+        }
+        return {
+            "embed": P((cfg.vocab, cfg.d_model), ("vocab", "embed"), scale=0.02),
+            "enc_layers": stack_layers(enc_block, cfg.n_enc_layers),
+            "dec_layers": stack_layers(dec_block, cfg.n_layers),
+            "enc_ln_f": _ln_table(cfg.d_model),
+            "dec_ln_f": _ln_table(cfg.d_model),
+        }
+
+    # ------------------------------------------------------------------
+    def encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(self.adtype)
+        x = x + sinusoid_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+
+        def body(x, p):
+            x = constrain(x, ("batch", None, None))  # pin carry sharding
+            h, _ = _mha(p["attn"], cfg, layernorm(x, p["ln1"], cfg.norm_eps),
+                        causal=False)
+            x = x + h
+            x = x + gelu_mlp(p["mlp"], layernorm(x, p["ln2"], cfg.norm_eps))
+            return x, None
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = _act_scan(body, x, params["enc_layers"])
+        return layernorm(x, params["enc_ln_f"], cfg.norm_eps)
+
+    def _decode_stack(self, params, x, enc_out, *, q_offset=0,
+                      collect_cache=False):
+        cfg = self.cfg
+
+        def body(x, p):
+            x = constrain(x, ("batch", None, None))  # pin carry sharding
+            h, kv = _mha(p["attn"], cfg,
+                         layernorm(x, p["ln1"], cfg.norm_eps),
+                         causal=True, q_offset=q_offset)
+            x = x + h
+            h, xkv = _mha(p["xattn"], cfg,
+                          layernorm(x, p["lnx"], cfg.norm_eps), enc_out,
+                          causal=False)
+            x = x + h
+            x = x + gelu_mlp(p["mlp"], layernorm(x, p["ln2"], cfg.norm_eps))
+            return x, ((kv, xkv) if collect_cache else None)
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, caches = _act_scan(body, x, params["dec_layers"])
+        return layernorm(x, params["dec_ln_f"], cfg.norm_eps), caches
+
+    def _embed_tokens(self, params, tokens, offset=0):
+        x = params["embed"].astype(self.adtype)[tokens]
+        return x + sinusoid_positions(x.shape[1], self.cfg.d_model,
+                                      offset).astype(x.dtype)
+
+    def loss(self, params, batch):
+        enc_out = self.encode(params, batch["frames"])
+        x = self._embed_tokens(params, batch["tokens"])
+        x, _ = self._decode_stack(params, x, enc_out)
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embed"].astype(self.adtype))
+        return cross_entropy(logits, batch["labels"])
+
+    def prefill(self, params, batch):
+        enc_out = self.encode(params, batch["frames"])
+        x = self._embed_tokens(params, batch["tokens"])
+        x, caches = self._decode_stack(params, x, enc_out,
+                                       collect_cache=True)
+        (k, v), (xk, xv) = caches
+        logits = jnp.einsum("bsd,vd->bsv", x[:, -1:],
+                            params["embed"].astype(self.adtype))
+        return logits, {"k": k, "v": v, "xk": xk, "xv": xv}
+
+    def decode(self, params, cache, batch):
+        cfg = self.cfg
+        pos = batch["pos"]
+        x = self._embed_tokens(params, batch["token"], offset=pos)
+
+        def body(x, inp):
+            p, ck, cv, xk, xv = inp
+            h = layernorm(x, p["ln1"], cfg.norm_eps)
+            B = x.shape[0]
+            dt = x.dtype
+            q = jnp.einsum("bsd,dhe->bshe", h, cast(p["attn"]["wq"], dt)) + \
+                cast(p["attn"]["bq"], dt)
+            k_new = jnp.einsum("bsd,dhe->bshe", h, cast(p["attn"]["wk"], dt))
+            v_new = jnp.einsum("bsd,dhe->bshe", h,
+                               cast(p["attn"]["wv"], dt)) + \
+                cast(p["attn"]["bv"], dt)
+            pos32 = jnp.asarray(pos, jnp.int32)
+            z = jnp.zeros((), jnp.int32)
+            ck = jax.lax.dynamic_update_slice(ck, k_new.astype(ck.dtype),
+                                              (z, pos32, z, z))
+            cv = jax.lax.dynamic_update_slice(cv, v_new.astype(cv.dtype),
+                                              (z, pos32, z, z))
+            qg = q.reshape(B, 1, cfg.n_heads, 1, cfg.hd)
+            o = flash_attention(qg, ck, cv, causal=False, kv_len=pos + 1)
+            o = o.reshape(B, 1, cfg.n_heads, cfg.hd)
+            x = x + jnp.einsum("bshe,hed->bsd", o,
+                               cast(p["attn"]["wo"], dt)) + \
+                cast(p["attn"]["bo"], dt)
+            h, _ = _mha(p["xattn"], cfg, layernorm(x, p["lnx"], cfg.norm_eps),
+                        causal=False, kv_override=(xk, xv))
+            x = x + h
+            x = x + gelu_mlp(p["mlp"], layernorm(x, p["ln2"], cfg.norm_eps))
+            return x, (ck, cv)
+
+        x, (k2, v2) = _act_scan(
+            body, x, (params["dec_layers"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+        x = layernorm(x, params["dec_ln_f"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embed"].astype(self.adtype))
+        return logits, {"k": k2, "v": v2, "xk": cache["xk"],
+                        "xv": cache["xv"]}
+
+    # ------------------------------------------------------------------
+    def input_specs(self, shape: Shape) -> dict:
+        cfg = self.cfg
+        B, S = shape.batch, shape.seq
+        sds = jax.ShapeDtypeStruct
+        frames = sds((B, cfg.enc_seq, cfg.d_model), self.adtype)
+        if shape.kind == "train":
+            return {"frames": frames,
+                    "tokens": sds((B, S), jnp.int32),
+                    "labels": sds((B, S), jnp.int32)}
+        if shape.kind == "prefill":
+            return {"frames": frames, "tokens": sds((B, S), jnp.int32)}
+        return {"token": sds((B, 1), jnp.int32), "pos": sds((), jnp.int32)}
+
+    def batch_pspecs(self, shape: Shape, batch_axes) -> dict:
+        spec = {}
+        for k in self.input_specs(shape):
+            if k == "pos":
+                spec[k] = PS()
+            elif k == "frames":
+                spec[k] = PS(batch_axes, None, None)
+            else:
+                spec[k] = PS(batch_axes, None)
+        return spec
+
+    def cache_specs(self, shape: Shape):
+        cfg = self.cfg
+        sds = jax.ShapeDtypeStruct
+        L, B = cfg.n_layers, shape.batch
+        return {
+            "k": sds((L, B, shape.seq, cfg.n_heads, cfg.hd), self.adtype),
+            "v": sds((L, B, shape.seq, cfg.n_heads, cfg.hd), self.adtype),
+            "xk": sds((L, B, cfg.enc_seq, cfg.n_heads, cfg.hd), self.adtype),
+            "xv": sds((L, B, cfg.enc_seq, cfg.n_heads, cfg.hd), self.adtype),
+        }
+
+    def cache_pspecs(self, shape: Shape, batch_axes, kv_axes):
+        ps = PS(None, batch_axes, None, kv_axes, None)
+        return {"k": ps, "v": ps, "xk": ps, "xv": ps}

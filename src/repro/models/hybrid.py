@@ -1,0 +1,146 @@
+"""Zamba2-style hybrid: Mamba2 backbone + *shared* full-attention blocks.
+
+Every ``attn_every`` SSM layers, one of ``n_shared_blocks`` shared dense
+transformer blocks is applied (parameters reused across applications,
+alternating).  Each application keeps its own KV cache.  Zamba2's per-
+application LoRA deltas on the shared block are omitted (DESIGN.md §5.3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from .act import scan as _act_scan
+from .config import ModelConfig, Shape
+from .layers import KVCache, dense_block, dense_block_decode, rmsnorm
+from .mamba2 import (init_mamba_cache_specs, mamba_block, mamba_block_decode,
+                     mamba_block_table)
+from .params import P
+from .transformer import DenseModel, block_table, stack_layers
+
+__all__ = ["HybridModel"]
+
+
+class HybridModel(DenseModel):
+    family = "hybrid"
+
+    def __init__(self, cfg: ModelConfig):
+        super().__init__(cfg)
+        assert cfg.attn_every > 0 and cfg.n_layers % cfg.attn_every == 0
+        self.n_apps = cfg.n_layers // cfg.attn_every
+
+    def table(self) -> dict:
+        cfg = self.cfg
+        t = {
+            "embed": P((cfg.vocab, cfg.d_model), ("vocab", "embed"), scale=0.02),
+            "layers": stack_layers(mamba_block_table(cfg), cfg.n_layers),
+            "shared": stack_layers(block_table(cfg), cfg.n_shared_blocks),
+            "ln_f": P((cfg.d_model,), (None,), "ones"),
+        }
+        if not cfg.tie_embeddings:
+            t["lm_head"] = P((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+        return t
+
+    # ------------------------------------------------------------------
+    def _group_params(self, params):
+        """Reshape stacked mamba layers (L, ...) -> (n_apps, attn_every, ...)."""
+        cfg = self.cfg
+        return jax.tree.map(
+            lambda a: a.reshape((self.n_apps, cfg.attn_every) + a.shape[1:]),
+            params["layers"])
+
+    def _backbone(self, params, x, positions, collect_cache: bool):
+        cfg = self.cfg
+        grouped = self._group_params(params)
+
+        def outer(carry, inp):
+            x = carry
+            app_i, group_params = inp
+
+            def inner(x, lp):
+                x, c = mamba_block(lp, cfg, x)
+                return x, (c if collect_cache else None)
+
+            x, mcaches = _act_scan(inner, x, group_params)
+            sp = jax.tree.map(lambda a: a[app_i % cfg.n_shared_blocks],
+                              params["shared"])
+            x, kv = dense_block(sp, cfg, x, positions=positions)
+            return x, ((mcaches, kv) if collect_cache else None)
+
+        if cfg.remat:
+            outer = jax.checkpoint(
+                outer, policy=jax.checkpoint_policies.nothing_saveable)
+        x, caches = _act_scan(
+            outer, x, (jnp.arange(self.n_apps), grouped))
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        aux = jnp.zeros((), jnp.float32)
+        return x, aux, caches
+
+    def prefill(self, params, batch):
+        x, positions = self._embed(params, batch)
+        x, _, caches = self._backbone(params, x, positions,
+                                      collect_cache=True)
+        mcaches, kvs = caches
+        # mcaches leaves: (n_apps, attn_every, B, ...) -> flatten layer dims
+        mcaches = jax.tree.map(
+            lambda a: a.reshape((self.cfg.n_layers,) + a.shape[2:]), mcaches)
+        logits = self._logits(params, x[:, -1:])
+        return logits, {"ssm": mcaches, "kv_k": kvs[0], "kv_v": kvs[1]}
+
+    def decode(self, params, cache, batch):
+        cfg = self.cfg
+        x = params["embed"].astype(self.adtype)[batch["token"]]
+        pos = batch["pos"]
+        grouped = self._group_params(params)
+        ssm_grouped = jax.tree.map(
+            lambda a: a.reshape((self.n_apps, cfg.attn_every) + a.shape[1:]),
+            cache["ssm"])
+
+        def outer(x, inp):
+            app_i, gp, sc, ck, cv = inp
+
+            def inner(x, lp_c):
+                lp, c = lp_c
+                x, c2 = mamba_block_decode(lp, cfg, x, c)
+                return x, c2
+
+            x, sc2 = _act_scan(inner, x, (gp, sc))
+            sp = jax.tree.map(lambda a: a[app_i % cfg.n_shared_blocks],
+                              params["shared"])
+            x, kv2 = dense_block_decode(sp, cfg, x, KVCache(ck, cv), pos)
+            return x, (sc2, kv2.k, kv2.v)
+
+        x, (ssm2, k2, v2) = _act_scan(
+            outer, x, (jnp.arange(self.n_apps), grouped, ssm_grouped,
+                       cache["kv_k"], cache["kv_v"]))
+        ssm2 = jax.tree.map(
+            lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), ssm2)
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return self._logits(params, x), {"ssm": ssm2, "kv_k": k2, "kv_v": v2}
+
+    # ------------------------------------------------------------------
+    def cache_specs(self, shape: Shape):
+        cfg = self.cfg
+        sds = jax.ShapeDtypeStruct
+        kv = sds((self.n_apps, shape.batch, shape.seq, cfg.kv_cache_heads,
+                  cfg.hd), self.adtype)
+        return {
+            "ssm": init_mamba_cache_specs(cfg, cfg.n_layers, shape.batch,
+                                          self.adtype),
+            "kv_k": kv,
+            "kv_v": kv,
+        }
+
+    def cache_pspecs(self, shape: Shape, batch_axes, kv_axes):
+        kv = PS(None, batch_axes, None, kv_axes, None)
+        return {
+            "ssm": {
+                "state": PS(None, batch_axes, kv_axes, None, None),
+                "tail_x": PS(None, batch_axes, None, kv_axes),
+                "tail_b": PS(None, batch_axes, None, None),
+                "tail_c": PS(None, batch_axes, None, None),
+            },
+            "kv_k": kv,
+            "kv_v": kv,
+        }

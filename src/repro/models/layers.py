@@ -1,0 +1,383 @@
+"""Shared neural-net layers: RMSNorm, RoPE, GQA attention (flash-style
+blocked softmax in pure JAX), SwiGLU/GELU MLPs, and the dense decoder block.
+
+Conventions:
+* params are f32 pytrees; activations/compute default to bf16 with f32
+  softmax/normalization internals;
+* attention uses an online-softmax scan over KV blocks (memory O(S·block)
+  instead of O(S^2)) — this is the pure-JAX flash pattern, needed so the 4k
+  train and 32k prefill shapes fit HBM at compile time (dry-run requirement);
+* GQA never materializes repeated KV heads (grouped einsum);
+* every function is shard_map/pjit friendly: no data-dependent shapes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .act import constrain, scan as _act_scan
+from .config import ModelConfig
+
+__all__ = [
+    "rmsnorm", "rope", "flash_attention", "attention", "decode_attention",
+    "swiglu", "gelu_mlp", "dense_block", "dense_block_decode", "KVCache",
+]
+
+DEFAULT_KV_BLOCK = 1024
+
+
+def cast(x, dtype):
+    return x.astype(dtype) if x.dtype != dtype else x
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm(x, w, eps: float = 1e-5):
+    """RMSNorm with f32 statistics but compute-dtype activation tensors in
+    BOTH directions: a plain autodiff rmsnorm leaks f32 (B,S,D) cotangents
+    into the residual stream (through the f32 mean-of-squares), doubling
+    the d_model all-reduce and save-restore traffic — the custom VJP keeps
+    dx in x.dtype (§Perf iteration 2b)."""
+    y, _ = _rmsnorm_fwd(x, w, eps)
+    return y
+
+
+def _rms_scale(x, eps):
+    ss = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32)
+    return jax.lax.rsqrt(ss / x.shape[-1] + eps)           # f32 (..., )
+
+
+def _rmsnorm_fwd(x, w, eps):
+    scale = _rms_scale(x, eps)
+    y = x * scale[..., None].astype(x.dtype) * w.astype(x.dtype)
+    return y, (x, w, scale)
+
+
+def _rmsnorm_bwd(eps, res, dy):
+    x, w, scale = res
+    D = x.shape[-1]
+    wb = w.astype(x.dtype)
+    # d/dx [x_i * s(x) * w_i] with s = rsqrt(mean(x^2)+eps):
+    #   dx = s * w * dy  -  x * s^3/D * sum_j(dy_j * w_j * x_j)
+    dyw = dy * wb
+    inner = jnp.einsum("...d,...d->...", dyw, x,
+                       preferred_element_type=jnp.float32)  # f32 stats only
+    coef = inner * (scale ** 3) / D
+    dx = (dyw * scale[..., None].astype(x.dtype) -
+          x * coef[..., None].astype(x.dtype))
+    # dw: reduce over all leading dims with f32 accumulation
+    xs = x * scale[..., None].astype(x.dtype)
+    red = tuple(range(x.ndim - 1))
+    dw = jnp.sum((dy * xs).astype(jnp.float32), axis=red).astype(w.dtype)
+    return dx, dw
+
+
+rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def _rope_angles(positions, hd: int, theta: float):
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) *
+                    jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S).
+
+    The sin/cos tables are f32 (small: no head dim); the rotation itself
+    runs in the compute dtype so no f32 activation-sized temps are
+    materialized (§Perf iteration 1)."""
+    from .act import legacy_f32
+    hd = x.shape[-1]
+    cos, sin = _rope_angles(positions, hd, theta)     # (..., S, half) f32
+    if legacy_f32():
+        cos = cos[..., None, :]
+        sin = sin[..., None, :]
+        x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+        return jnp.concatenate(
+            [x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+            axis=-1).astype(x.dtype)
+    cos = cos[..., None, :].astype(x.dtype)            # broadcast over heads
+    sin = sin[..., None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# flash-style attention (pure JAX online softmax over KV blocks)
+# ---------------------------------------------------------------------------
+
+def _flash_scan(q, k, v, causal: bool, q_offset, kv_len, block: int):
+    """Forward online-softmax scan. Returns (out, m, l) with out already
+    normalized; m/l are the per-query statistics needed by the custom
+    backward."""
+    B, Sq, Hkv, G, hd = q.shape
+    Skv = k.shape[1]
+    blk = min(block, Skv)
+    nblk = (Skv + blk - 1) // blk
+    pad = nblk * blk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    scale = 1.0 / math.sqrt(hd)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    kb = k.reshape(B, nblk, blk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, blk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        bi, kblk, vblk = inp
+        k_pos = bi * blk + jnp.arange(blk)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((Sq, blk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        mask &= k_pos[None, :] < (Skv if kv_len is None else kv_len)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = _act_scan(
+        step, (m0, l0, a0), (jnp.arange(nblk), kb, vb))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B,Sq,Hkv,G,hd)
+    return out, m, jnp.maximum(l, 1e-30)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_custom(q, k, v, causal: bool, q_offset: int, block: int):
+    out, _, _ = _flash_scan(q, k, v, causal, q_offset, None, block)
+    return out
+
+
+def _flash_custom_fwd(q, k, v, causal, q_offset, block):
+    out, m, l = _flash_scan(q, k, v, causal, q_offset, None, block)
+    return out, (q, k, v, out, m, l)
+
+
+def _flash_custom_bwd(causal, q_offset, block, res, dout):
+    """Flash-attention backward: recompute scores per KV block instead of
+    saving the per-block f32 (nblk, ...) statistics stacks jax autodiff
+    creates for the forward scan (§Perf iteration 3) — residuals are just
+    (q, k, v, out) plus the (B,Hkv,G,Sq) f32 softmax stats."""
+    q, k, v, out, m, l = res
+    B, Sq, Hkv, G, hd = q.shape
+    Skv = k.shape[1]
+    blk = min(block, Skv)
+    nblk = (Skv + blk - 1) // blk
+    pad = nblk * blk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    scale = 1.0 / math.sqrt(hd)
+    q_pos = q_offset + jnp.arange(Sq)
+    kb = k.reshape(B, nblk, blk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, blk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    do = dout.transpose(0, 2, 3, 1, 4)                 # (B,Hkv,G,Sq,hd)
+    # delta_i = sum_d dout_i * out_i  (f32 stats, no big f32 tensors)
+    delta = jnp.einsum("bqhgd,bqhgd->bhgq", dout.astype(jnp.float32),
+                       out.astype(jnp.float32))
+
+    def step(dq_acc, inp):
+        bi, kblk, vblk = inp
+        k_pos = bi * blk + jnp.arange(blk)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((Sq, blk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        mask &= k_pos[None, :] < Skv
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        p = (jnp.exp(s - m[..., None]) / l[..., None]).astype(q.dtype)
+        dv_blk = jnp.einsum("bhgqk,bhgqd->bkhd", p, do.astype(q.dtype))
+        dp = jnp.einsum("bhgqd,bkhd->bhgqk", do.astype(q.dtype), vblk)
+        ds = (p * (dp - delta[..., None].astype(q.dtype)) *
+              q.dtype.type(scale))
+        dq_acc = dq_acc + jnp.einsum("bhgqk,bkhd->bqhgd", ds, kblk,
+                                     preferred_element_type=jnp.float32)
+        dk_blk = jnp.einsum("bhgqk,bqhgd->bkhd", ds, q)
+        return dq_acc, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((B, Sq, Hkv, G, hd), jnp.float32)
+    dq, (dks, dvs) = _act_scan(step, dq0, (jnp.arange(nblk), kb, vb))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, nblk * blk, Hkv, hd)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, nblk * blk, Hkv, hd)
+    return (dq.astype(q.dtype), dk[:, :Skv].astype(k.dtype),
+            dv[:, :Skv].astype(v.dtype))
+
+
+_flash_custom.defvjp(_flash_custom_fwd, _flash_custom_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool, q_offset=0,
+                    kv_len: Optional[jax.Array] = None,
+                    block: int = DEFAULT_KV_BLOCK):
+    """q: (B, Sq, Hkv, G, hd); k/v: (B, Skv, Hkv, hd).
+
+    ``q_offset``: absolute position of q[0] (prefill continuation / decode).
+    ``kv_len``: optional dynamic valid-KV length (decode against a cache).
+    Train/prefill (static offset, no kv_len) uses the custom-VJP flash
+    backward; the decode path keeps the plain scan (no grads needed)."""
+    if kv_len is None and isinstance(q_offset, int):
+        return _flash_custom(q, k, v, causal, q_offset,
+                             min(block, k.shape[1]))
+    out, _, _ = _flash_scan(q, k, v, causal, q_offset, kv_len, block)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# attention layers
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, Smax, Hkv, hd)
+    v: jax.Array
+
+
+def _pad_heads(t, target: int):
+    """Pad the head dim (axis -2) of (B, S, h, hd) up to ``target`` heads."""
+    if t.shape[-2] >= target:
+        return t
+    pad = [(0, 0)] * t.ndim
+    pad[-2] = (0, target - t.shape[-2])
+    return jnp.pad(t, pad)
+
+
+def _project_qkv(p, cfg: ModelConfig, x, positions):
+    B, S, D = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhe->bshe", x, cast(p["wq"], dt))
+    k = jnp.einsum("bsd,dhe->bshe", x, cast(p["wk"], dt))
+    v = jnp.einsum("bsd,dhe->bshe", x, cast(p["wv"], dt))
+    # TP over heads for the attention activations (uneven counts padded by
+    # GSPMD; see models/act.py) — breaks model-axis redundancy when the head
+    # count does not divide the mesh axis.
+    q = constrain(q, ("batch", None, "model", None))
+    k = constrain(k, ("batch", None, "model", None))
+    v = constrain(v, ("batch", None, "model", None))
+    if cfg.qkv_bias:
+        q = q + cast(p["bq"], dt)
+        k = k + cast(p["bk"], dt)
+        v = v + cast(p["bv"], dt)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if positions is not None:  # rope (None for whisper-style abs-pos models)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention(p, cfg: ModelConfig, x, *, positions, causal: bool = True,
+              q_offset=0, kv_override=None):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    Returns (out, (k, v)) — k/v for cache capture during prefill.
+    ``kv_override``: (k, v) for cross-attention (keys from the encoder).
+    """
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // Hkv
+    if kv_override is None:
+        q, k, v = _project_qkv(p, cfg, x, positions)
+    else:
+        dt = x.dtype
+        q = jnp.einsum("bsd,dhe->bshe", x, cast(p["wq"], dt))
+        if cfg.qkv_bias:
+            q = q + cast(p["bq"], dt)
+        k, v = kv_override
+    B, S = x.shape[:2]
+    qg = q.reshape(B, S, Hkv, G, hd)
+    out = flash_attention(qg, k, v, causal=causal, q_offset=q_offset)
+    out = out.reshape(B, S, H, hd)
+    y = jnp.einsum("bshe,hed->bsd", out, cast(p["wo"], x.dtype))
+    # the cache copy is padded to kv_cache_heads so it can shard evenly
+    kvc = cfg.kv_cache_heads
+    return y, (_pad_heads(k, kvc), _pad_heads(v, kvc))
+
+
+def decode_attention(p, cfg: ModelConfig, x, cache: KVCache, pos):
+    """Single-token decode against a KV cache. x: (B, 1, D); pos: scalar.
+
+    Supports KV caches whose head dim is padded to ``cfg.kv_cache_heads``
+    (for even model-axis sharding): padded q rows are zero and their outputs
+    are sliced away."""
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // Hkv
+    B = x.shape[0]
+    kvc = cache.k.shape[-2]
+    pos = jnp.asarray(pos, jnp.int32)
+    z = jnp.zeros((), jnp.int32)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    k = jax.lax.dynamic_update_slice(
+        cache.k, _pad_heads(k_new, kvc).astype(cache.k.dtype),
+        (z, pos, z, z))
+    v = jax.lax.dynamic_update_slice(
+        cache.v, _pad_heads(v_new, kvc).astype(cache.v.dtype),
+        (z, pos, z, z))
+    qg = q.reshape(B, 1, Hkv, G, hd)
+    if kvc > Hkv:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, kvc - Hkv), (0, 0), (0, 0)))
+    out = flash_attention(qg, k, v, causal=False, kv_len=pos + 1)
+    out = out[:, :, :Hkv].reshape(B, 1, H, hd)
+    y = jnp.einsum("bshe,hed->bsd", out, cast(p["wo"], x.dtype))
+    return y, KVCache(k, v)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(p, x):
+    dt = x.dtype
+    g = jnp.einsum("bsd,df->bsf", x, cast(p["w_gate"], dt))
+    u = jnp.einsum("bsd,df->bsf", x, cast(p["w_up"], dt))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, cast(p["w_down"], dt))
+
+
+def gelu_mlp(p, x):
+    dt = x.dtype
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, cast(p["w_in"], dt)) +
+                    cast(p["b_in"], dt))
+    return jnp.einsum("bsf,fd->bsd", h, cast(p["w_out"], dt)) + cast(p["b_out"], dt)
+
+
+# ---------------------------------------------------------------------------
+# decoder blocks
+# ---------------------------------------------------------------------------
+
+def dense_block(p, cfg: ModelConfig, x, *, positions, causal=True,
+                q_offset=0):
+    x = constrain(x, ("batch", None, None))  # pin loop-carry sharding
+    h, kv = attention(p["attn"], cfg, rmsnorm(x, p["ln1"], cfg.norm_eps),
+                      positions=positions, causal=causal, q_offset=q_offset)
+    x = x + h
+    x = x + swiglu(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+    return x, kv
+
+
+def dense_block_decode(p, cfg: ModelConfig, x, cache: KVCache, pos):
+    h, cache = decode_attention(p["attn"], cfg,
+                                rmsnorm(x, p["ln1"], cfg.norm_eps), cache, pos)
+    x = x + h
+    x = x + swiglu(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+    return x, cache

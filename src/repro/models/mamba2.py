@@ -1,0 +1,266 @@
+"""Mamba2 (state-space duality / SSD) backbone — attention-free.
+
+Implements the chunked SSD scan (intra-chunk quadratic within ``ssm_chunk``
+tokens + inter-chunk linear state recurrence) for train/prefill, and the O(1)
+recurrent state update for decode.  Only ``ssm_groups == 1`` is supported
+(all assigned SSM/hybrid archs use one B/C group).
+
+Decode cache per layer: SSM state (B, H, N, P) + depthwise-conv tails for the
+x/B/C streams — constant size in sequence length, which is why the ``ssm`` and
+``hybrid`` families run the ``long_500k`` shape (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from .act import scan as _act_scan
+from .config import ModelConfig, Shape
+from .layers import rmsnorm
+from .params import P
+from .transformer import DenseModel, stack_layers
+
+__all__ = ["MambaModel", "mamba_block_table", "mamba_block", "mamba_block_decode",
+           "MambaCache", "init_mamba_cache_specs"]
+
+
+def mamba_block_table(cfg: ModelConfig) -> dict:
+    D, din = cfg.d_model, cfg.d_inner
+    H, Pd, N, ck = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.conv_kernel
+    assert cfg.ssm_groups == 1, "only ssm_groups=1 supported"
+    return {
+        "wz": P((D, din), ("embed", "ssm_inner")),
+        "wx": P((D, din), ("embed", "ssm_inner")),
+        "wb": P((D, N), ("embed", None)),
+        "wc": P((D, N), ("embed", None)),
+        "wdt": P((D, H), ("embed", None)),
+        "dt_bias": P((H,), (None,), "dt_bias"),
+        "a_log": P((H,), (None,), "a_log"),
+        "d_skip": P((H,), (None,), "ones"),
+        "conv_x": P((ck, din), (None, "ssm_inner")),
+        "conv_b": P((ck, N), (None, None)),
+        "conv_c": P((ck, N), (None, None)),
+        "conv_bias_x": P((din,), ("ssm_inner",), "zeros"),
+        "conv_bias_b": P((N,), (None,), "zeros"),
+        "conv_bias_c": P((N,), (None,), "zeros"),
+        "ln": P((D,), (None,), "ones"),
+        "norm": P((din,), ("ssm_inner",), "ones"),
+        "w_out": P((din, D), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_depthwise_conv(x, w, b, tail=None):
+    """x: (B, S, C); w: (ck, C); optional tail: (B, ck-1, C) from the cache.
+    Returns (y, new_tail)."""
+    ck = w.shape[0]
+    pad = x if tail is not None else jnp.pad(x, ((0, 0), (ck - 1, 0), (0, 0)))
+    if tail is not None:
+        pad = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    y = sum(pad[:, i:i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+            for i in range(ck))
+    y = y + b[None, None, :].astype(x.dtype)
+    new_tail = pad[:, -(ck - 1):, :] if ck > 1 else None
+    return jax.nn.silu(y), new_tail
+
+
+def ssd_chunked(xs, dt, A, Bm, Cm, chunk: int, initial_state=None):
+    """xs: (B,S,H,P); dt: (B,S,H) (post-softplus); A: (H,) negative;
+    Bm, Cm: (B,S,N).  Returns (y: (B,S,H,P), final_state: (B,H,N,P))."""
+    Bsz, S, H, Pd = xs.shape
+    N = Bm.shape[-1]
+    c = min(chunk, S)
+    Sp = ((S + c - 1) // c) * c
+    if Sp != S:
+        # zero-pad to a chunk multiple: dt=0 -> decay 1 and zero contribution,
+        # so the final state and real-position outputs are unaffected
+        pad = Sp - S
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    S_real, S = S, Sp
+    nc = S // c
+    dtype = xs.dtype
+
+    x_ = xs.reshape(Bsz, nc, c, H, Pd)
+    dt_ = dt.reshape(Bsz, nc, c, H).astype(jnp.float32)
+    B_ = Bm.reshape(Bsz, nc, c, N)
+    C_ = Cm.reshape(Bsz, nc, c, N)
+    a = dt_ * A[None, None, None, :]                      # (B,nc,c,H) <= 0
+    a_cs = jnp.cumsum(a, axis=2)
+
+    # intra-chunk (quadratic within the chunk); labels: b=batch, c=chunk idx,
+    # i/j=position within chunk, h=head, p=head dim, s=state dim.
+    # The (B,nc,c,c,H) decay/weight tensors are the HBM hot spot of SSD —
+    # keep them in the compute dtype end-to-end (exp(seg<=0) is in [0,1],
+    # safe in bf16); only the cumulative-sum statistics stay f32
+    # (§Perf iteration 1/3).
+    from .act import legacy_f32
+    seg = a_cs[:, :, :, None, :] - a_cs[:, :, None, :, :]  # (B,nc,c,c,H)
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    if legacy_f32():
+        CB = jnp.einsum("bcis,bcjs->bcij", C_, B_,
+                        preferred_element_type=jnp.float32)
+        decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+        w = (CB[..., None] * decay * dt_[:, :, None, :, :]).astype(dtype)
+    else:
+        CB = jnp.einsum("bcis,bcjs->bcij", C_, B_)        # compute dtype
+        decay = jnp.where(causal[None, None, :, :, None],
+                          jnp.exp(seg), 0.0).astype(dtype)
+        w = CB[..., None] * decay * dt_[:, :, None, :, :].astype(dtype)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, x_)
+
+    # chunk-local final states
+    sdec = jnp.exp(a_cs[:, :, -1:, :] - a_cs)             # (B,nc,c,H)
+    S_loc = jnp.einsum("bcjh,bcjs,bcjhp->bchsp",
+                       (sdec * dt_).astype(dtype), B_, x_)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cs[:, :, -1, :]).astype(jnp.float32)  # (B,nc,H)
+    S0 = (jnp.zeros((Bsz, H, N, Pd), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(S_prev, inp):
+        dec, Sl = inp
+        S_new = dec[:, :, None, None] * S_prev + Sl.astype(jnp.float32)
+        return S_new, S_prev
+
+    S_fin, S_prevs = _act_scan(
+        step, S0, (chunk_decay.transpose(1, 0, 2),
+                   S_loc.transpose(1, 0, 2, 3, 4)))
+    S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)            # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcis,bcih,bchsp->bcihp",
+                         C_, jnp.exp(a_cs).astype(dtype),
+                         S_prevs.astype(dtype))
+    y = (y_intra + y_inter).reshape(Bsz, S, H, Pd)
+    return y[:, :S_real], S_fin
+
+
+class MambaCache(dict):
+    """Per-layer-stacked cache: ssm (L,B,H,N,P) + conv tails."""
+
+
+def mamba_block(p, cfg: ModelConfig, x, cache=None):
+    """x: (B,S,D). cache: None (train) or dict of conv tails + state (decode
+    prefill capture).  Returns (x_out, new_cache_entries)."""
+    from .act import constrain
+    B, S, D = x.shape
+    H, Pd, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    dt_ = x.dtype
+    # pin the residual-stream sharding: nested scans (hybrid outer x inner)
+    # otherwise let GSPMD drop the batch sharding of the loop carry,
+    # replicating every SSD tensor across the data axis (§Perf iteration 4)
+    x = constrain(x, ("batch", None, None))
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    z = jnp.einsum("bsd,de->bse", h, p["wz"].astype(dt_))
+    xs = jnp.einsum("bsd,de->bse", h, p["wx"].astype(dt_))
+    Bm = jnp.einsum("bsd,dn->bsn", h, p["wb"].astype(dt_))
+    Cm = jnp.einsum("bsd,dn->bsn", h, p["wc"].astype(dt_))
+    dtr = jnp.einsum("bsd,dh->bsh", h, p["wdt"].astype(dt_))
+
+    xs, tail_x = _causal_depthwise_conv(xs, p["conv_x"], p["conv_bias_x"])
+    Bm, tail_b = _causal_depthwise_conv(Bm, p["conv_b"], p["conv_bias_b"])
+    Cm, tail_c = _causal_depthwise_conv(Cm, p["conv_c"], p["conv_bias_c"])
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, S_fin = ssd_chunked(xs.reshape(B, S, H, Pd), dt, A, Bm, Cm,
+                           cfg.ssm_chunk)
+    y = y + p["d_skip"].astype(dt_)[None, None, :, None] * \
+        xs.reshape(B, S, H, Pd)
+    y = y.reshape(B, S, cfg.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = x + jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(dt_))
+    new_cache = {"state": S_fin.astype(jnp.float32),
+                 "tail_x": tail_x, "tail_b": tail_b, "tail_c": tail_c}
+    return out, new_cache
+
+
+def mamba_block_decode(p, cfg: ModelConfig, x, cache):
+    """x: (B,1,D); cache entries per layer: state (B,H,N,P) f32 + conv tails."""
+    B = x.shape[0]
+    H, Pd, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    dt_ = x.dtype
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    z = jnp.einsum("bsd,de->bse", h, p["wz"].astype(dt_))
+    xs = jnp.einsum("bsd,de->bse", h, p["wx"].astype(dt_))
+    Bm = jnp.einsum("bsd,dn->bsn", h, p["wb"].astype(dt_))
+    Cm = jnp.einsum("bsd,dn->bsn", h, p["wc"].astype(dt_))
+    dtr = jnp.einsum("bsd,dh->bsh", h, p["wdt"].astype(dt_))
+
+    xs, tail_x = _causal_depthwise_conv(xs, p["conv_x"], p["conv_bias_x"],
+                                        tail=cache["tail_x"])
+    Bm, tail_b = _causal_depthwise_conv(Bm, p["conv_b"], p["conv_bias_b"],
+                                        tail=cache["tail_b"])
+    Cm, tail_c = _causal_depthwise_conv(Cm, p["conv_c"], p["conv_bias_c"],
+                                        tail=cache["tail_c"])
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))[:, 0]   # (B,H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xs.reshape(B, H, Pd).astype(jnp.float32)
+    Bv = Bm[:, 0].astype(jnp.float32)                              # (B,N)
+    Cv = Cm[:, 0].astype(jnp.float32)
+    S = cache["state"]
+    decay = jnp.exp(dt * A[None, :])                               # (B,H)
+    S_new = decay[:, :, None, None] * S + \
+        jnp.einsum("bh,bn,bhp->bhnp", dt, Bv, xh)
+    y = jnp.einsum("bn,bhnp->bhp", Cv, S_new)
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, 1, cfg.d_inner).astype(dt_)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = x + jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(dt_))
+    return out, {"state": S_new, "tail_x": tail_x, "tail_b": tail_b,
+                 "tail_c": tail_c}
+
+
+def init_mamba_cache_specs(cfg: ModelConfig, n_layers: int, batch: int,
+                           adtype):
+    sds = jax.ShapeDtypeStruct
+    H, Pd, N, ck = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.conv_kernel
+    return {
+        "state": sds((n_layers, batch, H, N, Pd), jnp.float32),
+        "tail_x": sds((n_layers, batch, ck - 1, cfg.d_inner), adtype),
+        "tail_b": sds((n_layers, batch, ck - 1, N), adtype),
+        "tail_c": sds((n_layers, batch, ck - 1, N), adtype),
+    }
+
+
+class MambaModel(DenseModel):
+    family = "ssm"
+
+    def block_table(self) -> dict:
+        return mamba_block_table(self.cfg)
+
+    def apply_block(self, p, x, *, positions, q_offset=0):
+        del positions, q_offset
+        x, cache = mamba_block(p, self.cfg, x)
+        return x, cache, jnp.zeros((), jnp.float32)
+
+    def decode(self, params, cache, batch):
+        cfg = self.cfg
+        x = params["embed"].astype(self.adtype)[batch["token"]]
+
+        def body(x, inp):
+            lp, c = inp
+            x, c2 = mamba_block_decode(lp, cfg, x, c)
+            return x, c2
+
+        x, new_cache = _act_scan(body, x, (params["layers"], cache))
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return self._logits(params, x), new_cache
+
+    def cache_specs(self, shape: Shape):
+        return init_mamba_cache_specs(self.cfg, self.cfg.n_layers,
+                                      shape.batch, self.adtype)
+
+    def cache_pspecs(self, shape: Shape, batch_axes, kv_axes):
+        return {
+            "state": PS(None, batch_axes, kv_axes, None, None),
+            "tail_x": PS(None, batch_axes, None, kv_axes),
+            "tail_b": PS(None, batch_axes, None, None),
+            "tail_c": PS(None, batch_axes, None, None),
+        }

@@ -1,0 +1,126 @@
+"""Parameter tables: single source of truth for shapes, init and sharding.
+
+Each model defines a nested dict of :class:`P` leaves.  ``init_params`` turns
+the table into arrays; ``pspecs`` turns the *same* table into
+``PartitionSpec``s via logical-axis rules — no drift between the two.
+
+Logical axes used across the zoo:
+  "embed"  — d_model dims            -> FSDP axes ("pod","data") by default
+  "mlp"    — feed-forward wide dim   -> "model" (TP)
+  "heads"  — attention head dim      -> "model" (TP) when divisible
+  "kv"     — kv-head dim             -> "model" when divisible else replicated
+  "vocab"  — embedding rows          -> "model"
+  "expert" — MoE expert dim          -> "model" (EP) when divisible
+  "layers" — stacked layer dim       -> never sharded (scan axis)
+  None     — replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+__all__ = ["P", "init_params", "pspecs", "count_params", "DEFAULT_RULES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """A parameter leaf: shape + logical axes + init spec."""
+    shape: tuple
+    axes: tuple                 # logical axis name per dim (or None)
+    init: str = "normal"        # normal | zeros | ones | a_log | dt_bias
+    scale: Optional[float] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+DEFAULT_RULES = {
+    "embed": ("fsdp",),
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "ssm_inner": ("model",),
+    "layers": (),
+}
+
+
+def _leaf_init(p: P, key, dtype):
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "a_log":  # mamba2 A in [-? ] log-uniform over [1, 16]
+        u = jax.random.uniform(key, p.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if p.init == "dt_bias":  # softplus^-1 of dt ~ U[1e-3, 1e-1]
+        u = jax.random.uniform(key, p.shape, jnp.float32, 1e-3, 1e-1)
+        return jnp.log(jnp.expm1(u)).astype(dtype)
+    # truncated-normal fan-in init
+    fan_in = p.shape[-2] if len(p.shape) >= 2 else max(p.shape[-1], 1)
+    scale = p.scale if p.scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, p.shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def init_params(table, key, dtype=jnp.float32):
+    """Materialize a parameter table into arrays (deterministic per path)."""
+    leaves, treedef = jax.tree.flatten(
+        table, is_leaf=lambda x: isinstance(x, P))
+    keys = jax.random.split(key, len(leaves))
+    arrs = [_leaf_init(p, k, dtype) for p, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def _axis_ok(mesh_axes: tuple, dim: int, mesh_shape: dict) -> bool:
+    """jit argument shardings must divide the dim exactly (XLA requirement);
+    non-divisible dims are replicated here and re-sharded *internally* via
+    with_sharding_constraint (models/act.py), which tolerates padding."""
+    total = 1
+    for a in mesh_axes:
+        total *= mesh_shape.get(a, 1)
+    return total > 0 and dim % total == 0
+
+
+def pspecs(table, mesh_shape: dict, rules: dict | None = None,
+           fsdp_axes: tuple = ("data",)):
+    """Build a PartitionSpec pytree from the table.
+
+    ``mesh_shape``: dict axis->size of the target mesh. ``fsdp_axes``: the
+    physical axes backing the logical "fsdp" group (e.g. ("pod","data")).
+    Shardings that do not divide a dim are dropped (replicated) unless a
+    single-axis padded sharding is cheap (see ``_axis_ok``).
+    """
+    rules = dict(DEFAULT_RULES if rules is None else rules)
+
+    def spec_for(p: P) -> PartitionSpec:
+        used = set()
+        out = []
+        for dim, ax in zip(p.shape, p.axes):
+            phys: tuple = ()
+            if ax is not None and ax in rules:
+                phys = tuple(rules[ax])
+                phys = tuple(fsdp_axes if a == "fsdp" else (a,) for a in phys)
+                phys = tuple(x for grp in phys for x in grp)
+            phys = tuple(a for a in phys if a not in used)
+            if phys and _axis_ok(phys, dim, mesh_shape):
+                used.update(phys)
+                out.append(phys if len(phys) > 1 else phys[0])
+            else:
+                out.append(None)
+        return PartitionSpec(*out)
+
+    return jax.tree.map(spec_for, table,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def count_params(table) -> int:
+    leaves = jax.tree.leaves(table, is_leaf=lambda x: isinstance(x, P))
+    return int(sum(np.prod(p.shape) for p in leaves))

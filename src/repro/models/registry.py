@@ -1,0 +1,26 @@
+"""Family registry: config -> model instance."""
+from __future__ import annotations
+
+from .config import ModelConfig
+
+MODEL_FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec", "vlm")
+
+
+def get_model(cfg: ModelConfig):
+    from .transformer import DenseModel
+    from .moe import MoEModel
+    from .mamba2 import MambaModel
+    from .hybrid import HybridModel
+    from .encdec import EncDecModel
+
+    fam = {
+        "dense": DenseModel,
+        "vlm": DenseModel,
+        "moe": MoEModel,
+        "ssm": MambaModel,
+        "hybrid": HybridModel,
+        "encdec": EncDecModel,
+    }
+    if cfg.family not in fam:
+        raise KeyError(f"unknown family {cfg.family}")
+    return fam[cfg.family](cfg)

@@ -1,0 +1,252 @@
+"""Dense decoder-only transformer (llama/qwen/granite family) and the
+pixtral-style VLM variant (stub vision frontend: precomputed patch embeddings
+prepended to the token sequence).
+
+API (shared by all families, see registry.py):
+  table()                      — parameter table (shapes + logical axes)
+  init(key)                    — materialized params
+  loss(params, batch)          — scalar train loss (batch: tokens/labels/...)
+  prefill(params, batch)       — (last-token logits, kv cache)
+  decode(params, cache, batch) — (logits, new cache)
+  input_specs(shape)           — ShapeDtypeStructs for the dry-run
+  batch_pspecs(shape)          — PartitionSpecs for inputs
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from .act import scan as _act_scan
+from .config import ModelConfig, Shape
+from .layers import (KVCache, dense_block, dense_block_decode, rmsnorm)
+from .params import P, init_params, pspecs
+
+__all__ = ["DenseModel"]
+
+
+def stack_layers(table: dict, n: int) -> dict:
+    """Prepend a stacked 'layers' dim to every leaf of a block table."""
+    return jax.tree.map(
+        lambda p: P((n,) + p.shape, ("layers",) + p.axes, p.init, p.scale),
+        table, is_leaf=lambda x: isinstance(x, P))
+
+
+def attn_table(cfg: ModelConfig) -> dict:
+    D, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    t = {
+        "wq": P((D, H, hd), ("embed", "heads", None)),
+        "wk": P((D, Hkv, hd), ("embed", "kv", None)),
+        "wv": P((D, Hkv, hd), ("embed", "kv", None)),
+        "wo": P((H, hd, D), ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        t["bq"] = P((H, hd), ("heads", None), "zeros")
+        t["bk"] = P((Hkv, hd), ("kv", None), "zeros")
+        t["bv"] = P((Hkv, hd), ("kv", None), "zeros")
+    if cfg.qk_norm:
+        t["q_norm"] = P((hd,), (None,), "ones")
+        t["k_norm"] = P((hd,), (None,), "ones")
+    return t
+
+
+def mlp_table(cfg: ModelConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": P((D, F), ("embed", "mlp")),
+        "w_up": P((D, F), ("embed", "mlp")),
+        "w_down": P((F, D), ("mlp", "embed")),
+    }
+
+
+def block_table(cfg: ModelConfig) -> dict:
+    return {
+        "attn": attn_table(cfg),
+        "mlp": mlp_table(cfg),
+        "ln1": P((cfg.d_model,), (None,), "ones"),
+        "ln2": P((cfg.d_model,), (None,), "ones"),
+    }
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Streamed CE: bf16 logits, fused f32 reductions (no f32 V-sized temp)."""
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(lf.max(axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+class DenseModel:
+    family = "dense"
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.adtype = jnp.dtype(cfg.dtype)
+
+    # ------------------------------------------------------------------
+    # parameters
+    # ------------------------------------------------------------------
+    def table(self) -> dict:
+        cfg = self.cfg
+        t = {
+            "embed": P((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                       scale=0.02),
+            "layers": stack_layers(self.block_table(), cfg.n_layers),
+            "ln_f": P((cfg.d_model,), (None,), "ones"),
+        }
+        if not cfg.tie_embeddings:
+            t["lm_head"] = P((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+        return t
+
+    def block_table(self) -> dict:
+        return block_table(self.cfg)
+
+    def init(self, key, dtype=jnp.float32):
+        return init_params(self.table(), key, dtype)
+
+    def param_pspecs(self, mesh_shape: dict, fsdp_axes=("data",)):
+        return pspecs(self.table(), mesh_shape, fsdp_axes=fsdp_axes)
+
+    # ------------------------------------------------------------------
+    # blocks (overridden by MoE)
+    # ------------------------------------------------------------------
+    def apply_block(self, p, x, *, positions, q_offset=0):
+        x, kv = dense_block(p, self.cfg, x, positions=positions,
+                            q_offset=q_offset)
+        return x, kv, jnp.zeros((), jnp.float32)  # (x, kv, aux_loss)
+
+    def apply_block_decode(self, p, x, cache, pos):
+        return dense_block_decode(p, self.cfg, x, cache, pos)
+
+    # ------------------------------------------------------------------
+    # forward passes
+    # ------------------------------------------------------------------
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = params["embed"].astype(self.adtype)[tokens]
+        if cfg.family == "vlm":
+            x = jnp.concatenate(
+                [batch["patch_embeds"].astype(self.adtype), x], axis=1)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        return x, positions
+
+    def _backbone(self, params, x, positions, collect_cache: bool):
+        cfg = self.cfg
+
+        # NOTE: the scan carry is *only* the bf16 residual stream.  A mixed
+        # (bf16, f32) carry makes XLA round-trip the full (L, B, S, D)
+        # saved-residual stack through f32 every layer, defeating in-place
+        # dynamic-update-slice (§Perf iteration 2) — aux losses travel
+        # through the stacked per-layer outputs instead.
+        def body(x, lp):
+            x, kv, a = self.apply_block(lp, x, positions=positions)
+            return x, ((kv, a) if collect_cache else a)
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, ys = _act_scan(body, x, params["layers"])
+        if collect_cache:
+            kvs, auxs = ys
+        else:
+            kvs, auxs = None, ys
+        return (rmsnorm(x, params["ln_f"], cfg.norm_eps), jnp.sum(auxs),
+                kvs)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            w = params["embed"].astype(self.adtype).T
+        else:
+            w = params["lm_head"].astype(self.adtype)
+        return jnp.einsum("bsd,dv->bsv", x, w)
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x, positions = self._embed(params, batch)
+        x, aux, _ = self._backbone(params, x, positions, collect_cache=False)
+        if cfg.family == "vlm":  # loss only on text positions
+            x = x[:, cfg.n_patches:]
+        logits = self._logits(params, x)
+        return cross_entropy(logits, batch["labels"]) + 0.01 * aux
+
+    def prefill(self, params, batch):
+        x, positions = self._embed(params, batch)
+        x, _, kvs = self._backbone(params, x, positions, collect_cache=True)
+        logits = self._logits(params, x[:, -1:])
+        return logits, kvs  # kvs: (k, v) stacked over layers
+
+    def decode(self, params, cache, batch):
+        """batch: {"token": (B,1) int32, "pos": scalar int32}."""
+        cfg = self.cfg
+        x = params["embed"].astype(self.adtype)[batch["token"]]
+        pos = batch["pos"]
+
+        def body(x, inp):
+            lp, ck, cv = inp
+            x, c2 = self.apply_block_decode(lp, x, KVCache(ck, cv), pos)
+            return x, (c2.k, c2.v)
+
+        x, new_cache = _act_scan(body, x,
+                                    (params["layers"], cache[0], cache[1]))
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return self._logits(params, x), new_cache
+
+    # ------------------------------------------------------------------
+    # dry-run plumbing
+    # ------------------------------------------------------------------
+    def text_len(self, shape: Shape) -> int:
+        if self.cfg.family == "vlm" and shape.kind == "train":
+            return shape.seq - self.cfg.n_patches
+        return shape.seq
+
+    def input_specs(self, shape: Shape) -> dict:
+        cfg = self.cfg
+        B, S = shape.batch, shape.seq
+        sds = jax.ShapeDtypeStruct
+        if shape.kind == "train":
+            spec = {"tokens": sds((B, self.text_len(shape)), jnp.int32),
+                    "labels": sds((B, self.text_len(shape)), jnp.int32)}
+            if cfg.family == "vlm":
+                spec["patch_embeds"] = sds((B, cfg.n_patches, cfg.d_model),
+                                           self.adtype)
+            return spec
+        if shape.kind == "prefill":
+            spec = {"tokens": sds((B, self.text_len(shape)), jnp.int32)}
+            if cfg.family == "vlm":
+                spec["patch_embeds"] = sds((B, cfg.n_patches, cfg.d_model),
+                                           self.adtype)
+            return spec
+        return {"token": sds((B, 1), jnp.int32),
+                "pos": sds((), jnp.int32)}
+
+    def batch_pspecs(self, shape: Shape, batch_axes) -> dict:
+        spec = {}
+        for k in self.input_specs(shape):
+            if k == "pos":
+                spec[k] = PS()
+            elif k == "patch_embeds":
+                spec[k] = PS(batch_axes, None, None)
+            else:
+                spec[k] = PS(batch_axes, None)
+        return spec
+
+    def cache_specs(self, shape: Shape) -> tuple:
+        cfg = self.cfg
+        B, S = shape.batch, shape.seq
+        sds = jax.ShapeDtypeStruct
+        shp = (cfg.n_layers, B, S, cfg.kv_cache_heads, cfg.hd)
+        return (sds(shp, self.adtype), sds(shp, self.adtype))
+
+    def cache_pspecs(self, shape: Shape, batch_axes, kv_axes) -> tuple:
+        ps = PS(None, batch_axes, None, kv_axes, None)
+        return (ps, ps)

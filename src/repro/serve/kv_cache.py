@@ -1,0 +1,99 @@
+"""Paged KV cache (vLLM-style pages, JAX arrays + host-side allocator).
+
+Pages are (L, n_pages, page_size, n_kv, hd) arrays; sequences own pages via a
+host-side page table.  ``gather_cache`` materializes the contiguous
+(L, B, S, kv, hd) view for the decode step (on TPU this is a cheap gather
+along the page dim).  The allocator is a free list with reference counts so
+frozen prefix segments (prefix_cache.py) can share pages copy-free.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PagedKVCache"]
+
+
+class PagedKVCache:
+    def __init__(self, n_layers: int, n_pages: int, page_size: int,
+                 n_kv: int, head_dim: int, dtype=jnp.bfloat16):
+        shape = (n_layers, n_pages, page_size, n_kv, head_dim)
+        self.k = jnp.zeros(shape, dtype)
+        self.v = jnp.zeros(shape, dtype)
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.free: List[int] = list(range(n_pages))
+        self.refs = np.zeros(n_pages, np.int32)
+        self.tables: Dict[int, List[int]] = {}
+
+    # -- allocator -------------------------------------------------------
+    def alloc_seq(self, seq_id: int, n_tokens: int) -> List[int]:
+        need = (n_tokens + self.page_size - 1) // self.page_size
+        if len(self.free) < need:
+            raise MemoryError("KV pool exhausted")
+        pages = [self.free.pop() for _ in range(need)]
+        for p in pages:
+            self.refs[p] += 1
+        self.tables[seq_id] = pages
+        return pages
+
+    def extend_seq(self, seq_id: int, n_tokens_now: int) -> None:
+        pages = self.tables[seq_id]
+        need = (n_tokens_now + self.page_size - 1) // self.page_size
+        while len(pages) < need:
+            p = self.free.pop()
+            self.refs[p] += 1
+            pages.append(p)
+
+    def share_pages(self, seq_id: int, pages: List[int]) -> None:
+        """Adopt frozen prefix pages (copy-on-write not needed: read-only)."""
+        for p in pages:
+            self.refs[p] += 1
+        self.tables[seq_id] = list(pages) + self.tables.get(seq_id, [])
+
+    def free_seq(self, seq_id: int) -> None:
+        for p in self.tables.pop(seq_id, []):
+            self.refs[p] -= 1
+            if self.refs[p] == 0:
+                self.free.append(p)
+
+    # -- device ops ------------------------------------------------------
+    def write_prefill(self, seq_id: int, k_new, v_new) -> None:
+        """k_new/v_new: (L, S, kv, hd) for one sequence."""
+        S = k_new.shape[1]
+        self.extend_seq(seq_id, S)
+        pages = self.tables[seq_id]
+        ps = self.page_size
+        pad = (len(pages) * ps) - S
+        kp = jnp.pad(k_new, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v_new, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kp = kp.reshape(k_new.shape[0], len(pages), ps, *k_new.shape[2:])
+        vp = vp.reshape(v_new.shape[0], len(pages), ps, *v_new.shape[2:])
+        idx = jnp.asarray(pages, jnp.int32)
+        self.k = self.k.at[:, idx].set(kp)
+        self.v = self.v.at[:, idx].set(vp)
+
+    def write_token(self, seq_id: int, pos: int, k_new, v_new) -> None:
+        """k_new/v_new: (L, 1, kv, hd) single decoded token at ``pos``."""
+        self.extend_seq(seq_id, pos + 1)
+        page = self.tables[seq_id][pos // self.page_size]
+        off = pos % self.page_size
+        self.k = self.k.at[:, page, off].set(k_new[:, 0])
+        self.v = self.v.at[:, page, off].set(v_new[:, 0])
+
+    def gather_cache(self, seq_ids: List[int], max_pages: int):
+        """(L, B, max_pages*page_size, kv, hd) contiguous view + lengths."""
+        tables = []
+        for sid in seq_ids:
+            t = self.tables[sid][:max_pages]
+            tables.append(t + [0] * (max_pages - len(t)))
+        idx = jnp.asarray(tables, jnp.int32)                 # (B, max_pages)
+        k = self.k[:, idx]                                    # (L,B,P,ps,kv,hd)
+        v = self.v[:, idx]
+        L, B = k.shape[0], k.shape[1]
+        S = max_pages * self.page_size
+        return (k.reshape(L, B, S, *k.shape[4:]),
+                v.reshape(L, B, S, *v.shape[4:]))

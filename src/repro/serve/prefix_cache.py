@@ -1,0 +1,95 @@
+"""bloomRF-indexed prefix-KV-cache admission (the paper's LSM integration,
+re-targeted at serving).
+
+Frozen cache *segments* are the analogue of SST files: immutable maps from
+``(session, chunk_position)`` keys to lists of KV page ids.  Each segment
+carries a bloomRF built over its keys, so a batched lookup consults cheap
+filters before touching any segment's (potentially cold) map:
+
+* point query  — "is this exact (session, chunk) prefix cached?"
+* range query  — "does this segment hold ANY chunk for session s?"
+  (key space is session<<B | chunk, so a session's chunks are one range),
+  and "any activity in a session-id window?" for range-based eviction sweeps.
+
+Keys are packed into a 32-bit domain (16-bit session, 16-bit chunk) so the
+filter runs without the x64 flag in serving processes; the 64-bit layout is a
+constructor switch.  Filters never produce false negatives -> no cached
+prefix is ever missed; a false positive costs one extra map probe (counted
+in stats).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import BloomRF, basic_layout
+
+__all__ = ["PrefixCacheIndex", "pack_key"]
+
+_CHUNK_BITS = 16
+
+
+def pack_key(session: int, chunk: int) -> int:
+    return ((session & 0xFFFF) << _CHUNK_BITS) | (chunk & 0xFFFF)
+
+
+class _Segment:
+    def __init__(self, entries: Dict[int, List[int]], bits_per_key: float):
+        self.entries = entries
+        n = max(len(entries), 1)
+        self.layout = basic_layout(32, n, bits_per_key, delta=6)
+        self.filter = BloomRF(self.layout)
+        keys = jnp.asarray(list(entries) or [0], jnp.uint32)
+        self.state = self.filter.build(keys)
+
+
+class PrefixCacheIndex:
+    def __init__(self, bits_per_key: float = 14.0):
+        self.bits_per_key = bits_per_key
+        self.segments: List[_Segment] = []
+        self.stats = {"filter_probes": 0, "filter_hits": 0,
+                      "map_probes": 0, "map_hits": 0}
+
+    # ------------------------------------------------------------------
+    def freeze_segment(self, entries: Dict[int, List[int]]) -> int:
+        """Freeze a batch of (packed key -> page list) into a new segment."""
+        self.segments.append(_Segment(dict(entries), self.bits_per_key))
+        return len(self.segments) - 1
+
+    def lookup(self, session: int, chunk: int) -> Optional[List[int]]:
+        """Newest-first point lookup through the segment filters."""
+        key = pack_key(session, chunk)
+        kq = jnp.uint32(key)
+        for seg in reversed(self.segments):
+            self.stats["filter_probes"] += 1
+            if bool(seg.filter.point(seg.state, kq)):
+                self.stats["filter_hits"] += 1
+                self.stats["map_probes"] += 1
+                if key in seg.entries:
+                    self.stats["map_hits"] += 1
+                    return seg.entries[key]
+        return None
+
+    def session_segments(self, session: int) -> List[int]:
+        """Range query: segments possibly holding ANY chunk of ``session``."""
+        lo = jnp.uint32(pack_key(session, 0))
+        hi = jnp.uint32(pack_key(session, (1 << _CHUNK_BITS) - 1))
+        out = []
+        for i, seg in enumerate(self.segments):
+            self.stats["filter_probes"] += 1
+            if bool(seg.filter.range(seg.state, lo, hi)):
+                out.append(i)
+        return out
+
+    def eviction_candidates(self, lo_session: int, hi_session: int) -> List[int]:
+        """Range sweep over a session-id window (e.g. expired id range)."""
+        lo = jnp.uint32(pack_key(lo_session, 0))
+        hi = jnp.uint32(pack_key(hi_session, (1 << _CHUNK_BITS) - 1))
+        return [i for i, seg in enumerate(self.segments)
+                if bool(seg.filter.range(seg.state, lo, hi))]
+
+    def false_positive_rate(self) -> float:
+        fp = self.stats["map_probes"] - self.stats["map_hits"]
+        return fp / max(self.stats["filter_hits"], 1)

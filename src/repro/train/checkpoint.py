@@ -1,0 +1,218 @@
+"""Sharded checkpointing with a bloomRF layer-range index per shard.
+
+Layout on disk (one directory per step):
+    step_000123/
+      manifest.json         — leaf paths, shapes, dtypes, shard assignment,
+                              bloomRF layout + per-shard filter state
+      shard_00.npz ...      — stacked-layer leaves split by layer ranges
+                              (non-layer leaves live in shard 0)
+
+Every (layer, leaf) stored in a shard is keyed as ``ordinal << 7 | layer``
+and inserted into that shard's bloomRF.  An elastic restart that only needs a
+layer range (e.g. a pipeline stage re-shard, or a mesh-size change) issues a
+*batched range query* per leaf ordinal — [ord<<7|lo, ord<<7|hi] — against
+each shard's filter and downloads only matching shards: the paper's
+range-filter pruning applied to checkpoint I/O, with narrow ranges where
+bloomRF's FPR is lowest.  Filters have no false negatives, so restores are
+always complete; a false positive merely fetches one extra shard.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import BloomRF, basic_layout
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "restore_layer_range",
+           "latest_step", "AsyncSaver"]
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _is_layer_leaf(key: str, arr) -> bool:
+    return "layers" in key and arr.ndim >= 1 and arr.shape[0] > 1
+
+
+def _step_dir(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:06d}")
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, n_shards: int = 4) -> str:
+    flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+    keys = sorted(flat)
+    n_layers = max((flat[k].shape[0] for k in keys
+                    if _is_layer_leaf(k, flat[k])), default=1)
+    n_shards = max(1, min(n_shards, n_layers))
+    bounds = np.linspace(0, n_layers, n_shards + 1).astype(int)
+
+    sdir = _step_dir(ckpt_dir, step)
+    os.makedirs(sdir + ".tmp", exist_ok=True)
+    shard_files: dict = {s: {} for s in range(n_shards)}
+    shard_keys: dict = {s: [] for s in range(n_shards)}  # filter keys
+    manifest = {"step": step, "n_shards": n_shards, "n_layers": int(n_layers),
+                "leaves": {}, "bounds": bounds.tolist()}
+
+    for ordinal, k in enumerate(keys):
+        arr = flat[k]
+        manifest["leaves"][k] = {
+            "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "ordinal": ordinal, "layered": _is_layer_leaf(k, arr)}
+        if _is_layer_leaf(k, arr):
+            for s in range(n_shards):
+                lo, hi = bounds[s], bounds[s + 1]
+                if hi > lo:
+                    shard_files[s][k] = arr[lo:hi]
+                    shard_keys[s].extend(
+                        (ordinal << 7) | int(l) for l in range(lo, hi))
+        else:
+            shard_files[0][k] = arr
+            shard_keys[0].append(ordinal << 7)  # layer 0 pseudo-key
+
+    # bloomRF per shard over (ordinal << 7 | layer) keys.  The filter domain
+    # is sized to the actual key span (clustered keys in an oversized domain
+    # saturate the upper dyadic levels — paper §7 'Memory Management').
+    max_key = max((max(v) for v in shard_keys.values() if v), default=1)
+    dom = max(8, int(max_key).bit_length() + 1)
+    filt_meta = []
+    for s in range(n_shards):
+        nkeys = max(len(shard_keys[s]), 1)
+        lay = basic_layout(dom, nkeys, bits_per_key=20.0, delta=3)
+        f = BloomRF(lay)
+        state = f.build(jnp.asarray(shard_keys[s] or [0], jnp.uint32))
+        shard_files[s]["__bloomrf__"] = np.asarray(state)
+        filt_meta.append({"n_keys": nkeys, "bits_per_key": 20.0, "delta": 3,
+                          "domain_bits": dom})
+    manifest["filters"] = filt_meta
+
+    for s in range(n_shards):
+        np.savez(os.path.join(sdir + ".tmp", f"shard_{s:02d}.npz"),
+                 **shard_files[s])
+    with open(os.path.join(sdir + ".tmp", "manifest.json"), "w") as fh:
+        json.dump(manifest, fh)
+    if os.path.exists(sdir):
+        import shutil
+        shutil.rmtree(sdir)
+    os.rename(sdir + ".tmp", sdir)
+    return sdir
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None
+
+
+def _load_manifest(ckpt_dir: str, step: int):
+    sdir = _step_dir(ckpt_dir, step)
+    with open(os.path.join(sdir, "manifest.json")) as fh:
+        return sdir, json.load(fh)
+
+
+def _shard_filter(sdir, manifest, s):
+    meta = manifest["filters"][s]
+    lay = basic_layout(meta.get("domain_bits", 32), meta["n_keys"],
+                       meta["bits_per_key"], delta=meta["delta"])
+    data = np.load(os.path.join(sdir, f"shard_{s:02d}.npz"))
+    return BloomRF(lay), jnp.asarray(data["__bloomrf__"]), data
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like):
+    """Full restore; reassembles layer shards. ``like`` provides the pytree
+    structure (and device placement targets, if sharded)."""
+    sdir, manifest = _load_manifest(ckpt_dir, step)
+    shards = [np.load(os.path.join(sdir, f"shard_{s:02d}.npz"))
+              for s in range(manifest["n_shards"])]
+    out = {}
+    for k, meta in manifest["leaves"].items():
+        if meta["layered"]:
+            parts = [sh[k] for sh in shards if k in sh.files]
+            out[k] = np.concatenate(parts, axis=0)
+        else:
+            out[k] = shards[0][k]
+    _, tdef = jax.tree.flatten(like)
+    keys = _flatten_order_keys(like)
+    assert sorted(keys) == sorted(out), "checkpoint/restore tree mismatch"
+    return jax.tree.unflatten(tdef, [jnp.asarray(out[k]) for k in keys])
+
+
+def _flatten_order_keys(tree):
+    return [
+        _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]
+
+
+def restore_layer_range(ckpt_dir: str, step: int, lo_layer: int,
+                        hi_layer: int):
+    """Elastic partial restore: batched narrow range queries — one per
+    layered leaf ordinal, [ord<<7|lo, ord<<7|hi] — against each shard's
+    bloomRF; only matching shards are loaded.  Returns (flat dict of
+    layer-sliced arrays, shards_probed, shards_loaded)."""
+    sdir, manifest = _load_manifest(ckpt_dir, step)
+    ordinals = [m["ordinal"] for m in manifest["leaves"].values()
+                if m["layered"]]
+    los = jnp.asarray([(o << 7) | lo_layer for o in ordinals], jnp.uint32)
+    his = jnp.asarray([(o << 7) | hi_layer for o in ordinals], jnp.uint32)
+    picked, probed = [], 0
+    for s in range(manifest["n_shards"]):
+        f, state, data = _shard_filter(sdir, manifest, s)
+        probed += 1
+        hit = bool(np.asarray(f.range(state, los, his)).any())
+        if hit:
+            picked.append((s, data))
+    out = {}
+    bounds = manifest["bounds"]
+    for k, meta in manifest["leaves"].items():
+        if not meta["layered"]:
+            continue
+        parts = []
+        for s, data in picked:
+            if k not in data.files:
+                continue
+            base = bounds[s]
+            arr = data[k]
+            a = max(lo_layer - base, 0)
+            b = min(hi_layer + 1 - base, arr.shape[0])
+            if b > a:
+                parts.append(arr[a:b])
+        if parts:
+            out[k] = np.concatenate(parts, axis=0)
+    return out, probed, len(picked)
+
+
+class AsyncSaver:
+    """Overlap checkpoint serialization with training (device->host copy on
+    the caller thread, file I/O in the background)."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, ckpt_dir: str, step: int, tree, n_shards: int = 4):
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self.wait()
+        self._thread = threading.Thread(
+            target=save_checkpoint, args=(ckpt_dir, step, host_tree, n_shards),
+            daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,159 @@
+"""Train step factory + the host-side Trainer driver.
+
+``make_train_step`` builds a jit-able, fully-sharded step:
+  (params, opt_state, [ef_error], batch) -> (params, opt_state, metrics)
+with optional microbatch gradient accumulation (lax.scan over microbatches)
+and optional int8 error-feedback gradient compression.
+
+``Trainer`` is the host loop: data iterator, metrics JSONL, periodic +
+async checkpointing, straggler detection hooks and crash/restart recovery
+(see fault_tolerance.py for the supervisor).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.compression import ef_compress, ef_init
+from .optimizer import OptConfig, adamw_init, adamw_update
+
+__all__ = ["TrainConfig", "make_train_step", "Trainer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 200
+    microbatches: int = 1           # gradient accumulation
+    grad_compression: bool = False  # int8 error-feedback
+    checkpoint_every: int = 50
+    log_every: int = 10
+    straggler_zscore: float = 3.0
+    seed: int = 0
+
+
+def make_train_step(model, opt_cfg: OptConfig, train_cfg: TrainConfig):
+    """Returns step(params, opt_state, ef_error, batch) -> (...)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def grads_of(params, batch):
+        if train_cfg.microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        mb = train_cfg.microbatches
+
+        def split(x):
+            return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+
+        batches = jax.tree.map(
+            lambda x: split(x) if x.ndim >= 1 and x.shape[0] % mb == 0 else
+            jnp.broadcast_to(x, (mb,) + x.shape), batch)
+
+        def body(carry, b):
+            loss, g = jax.value_and_grad(loss_fn)(params, b)
+            acc_l, acc_g = carry
+            return (acc_l + loss / mb,
+                    jax.tree.map(lambda a, x: a + x / mb, acc_g, g)), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+        (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zeros), batches)
+        return loss, grads
+
+    def step(params, opt_state, ef_error, batch):
+        loss, grads = grads_of(params, batch)
+        if train_cfg.grad_compression:
+            grads, ef_error = ef_compress(grads, ef_error)
+        params, opt_state, om = adamw_update(opt_cfg, grads, opt_state, params)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, ef_error, metrics
+
+    return step
+
+
+class Trainer:
+    """Host-side training driver with fault-tolerance hooks."""
+
+    def __init__(self, model, params, opt_cfg: OptConfig,
+                 train_cfg: TrainConfig, data_iter,
+                 ckpt_dir: Optional[str] = None,
+                 step_fn: Optional[Callable] = None,
+                 fail_at_step: Optional[int] = None):
+        from .checkpoint import latest_step, restore_checkpoint
+
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self.cfg = train_cfg
+        self.data_iter = data_iter
+        self.ckpt_dir = ckpt_dir
+        self.fail_at_step = fail_at_step  # failure injection (tests)
+        self.metrics_log: list = []
+        self.straggler_events: list = []
+
+        self.step_fn = step_fn or jax.jit(
+            make_train_step(model, opt_cfg, train_cfg))
+        self.params = params
+        self.opt_state = adamw_init(params)
+        self.ef_error = (ef_init(params) if train_cfg.grad_compression
+                         else jax.tree.map(lambda p: jnp.zeros((), jnp.float32),
+                                           {}))
+        self.start_step = 0
+        if ckpt_dir and latest_step(ckpt_dir) is not None:
+            st = latest_step(ckpt_dir)
+            tree = restore_checkpoint(
+                ckpt_dir, st,
+                {"params": self.params, "opt": self.opt_state})
+            self.params = tree["params"]
+            self.opt_state = tree["opt"]
+            self.start_step = st + 1
+
+    # ------------------------------------------------------------------
+    def _detect_straggler(self, times):
+        if len(times) < 8:
+            return None
+        arr = np.asarray(times[-32:])
+        mu, sd = arr[:-1].mean(), arr[:-1].std() + 1e-9
+        z = (arr[-1] - mu) / sd
+        if z > self.cfg.straggler_zscore:
+            return {"step": len(times) - 1, "z": float(z),
+                    "action": "flagged-for-rescheduling"}
+        return None
+
+    def run(self):
+        from .checkpoint import save_checkpoint
+
+        times = []
+        step = self.start_step
+        while step < self.cfg.steps:
+            batch = next(self.data_iter)
+            if self.fail_at_step is not None and step == self.fail_at_step:
+                self.fail_at_step = None
+                raise RuntimeError(f"injected failure at step {step}")
+            t0 = time.perf_counter()
+            self.params, self.opt_state, self.ef_error, metrics = \
+                self.step_fn(self.params, self.opt_state, self.ef_error,
+                             batch)
+            jax.block_until_ready(metrics["loss"])
+            times.append(time.perf_counter() - t0)
+            ev = self._detect_straggler(times)
+            if ev:
+                self.straggler_events.append(ev)
+            if step % self.cfg.log_every == 0 or step == self.cfg.steps - 1:
+                rec = {"step": step,
+                       **{k: float(v) for k, v in metrics.items()},
+                       "step_time_s": times[-1]}
+                self.metrics_log.append(rec)
+            if self.ckpt_dir and (
+                    (step + 1) % self.cfg.checkpoint_every == 0 or
+                    step == self.cfg.steps - 1):
+                save_checkpoint(self.ckpt_dir, step,
+                                {"params": self.params,
+                                 "opt": self.opt_state})
+            step += 1
+        return self.metrics_log

@@ -1,0 +1,27 @@
+import os
+import sys
+
+# Filter tests need 64-bit keys; model code pins dtypes explicitly so the
+# x64 flag is safe to enable process-wide for the test session.
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0xB100F)
+
+
+def brute_force_range_truth(keys, lo, hi):
+    """Ground-truth range emptiness for sorted uint64 keys."""
+    ks = np.sort(np.asarray(keys, np.uint64))
+    lo = np.asarray(lo, np.uint64)
+    hi = np.asarray(hi, np.uint64)
+    idx = np.searchsorted(ks, lo)
+    in_range = idx < len(ks)
+    cand = ks[np.minimum(idx, len(ks) - 1)]
+    return in_range & (cand <= hi)

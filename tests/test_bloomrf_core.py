@@ -1,0 +1,146 @@
+"""Core bloomRF correctness: the no-false-negative invariant (exhaustive on
+small domains, randomized on 64-bit), FPR agreement with the paper's model,
+and the paper's §7 worked example."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from conftest import brute_force_range_truth
+from repro.core import BloomRF, FilterLayout, basic_layout
+from repro.core.model import basic_range_fpr, level_fprs
+from repro.core.tuning import advise
+
+
+def _build(layout, keys):
+    f = BloomRF(layout)
+    return f, f.build(jnp.asarray(keys, f.kdtype))
+
+
+@pytest.mark.parametrize("delta", [1, 2, 3, 4, 5, 6, 7])
+def test_exhaustive_no_false_negatives_small_domain(rng, delta):
+    d = 8
+    keys = np.unique(rng.integers(0, (1 << d) - 1, 12, dtype=np.uint64))
+    lay = basic_layout(d, len(keys), bits_per_key=14.0, delta=delta)
+    f, state = _build(lay, keys)
+    los, his = np.meshgrid(np.arange(1 << d, dtype=np.uint64),
+                           np.arange(1 << d, dtype=np.uint64))
+    mask = los.ravel() <= his.ravel()
+    lo = los.ravel()[mask]
+    hi = his.ravel()[mask]
+    res = np.asarray(f.range(state, jnp.asarray(lo, f.kdtype),
+                             jnp.asarray(hi, f.kdtype)))
+    truth = brute_force_range_truth(keys, lo, hi)
+    assert not (truth & ~res).any(), "range false negative"
+    pq = np.arange(1 << d, dtype=np.uint64)
+    pres = np.asarray(f.point(state, jnp.asarray(pq, f.kdtype)))
+    assert pres[np.isin(pq, keys)].all(), "point false negative"
+
+
+@pytest.mark.parametrize("d,delta,n", [(16, 4, 200), (32, 6, 500),
+                                       (64, 7, 2000)])
+def test_no_false_negatives_random(rng, d, delta, n):
+    hi_dom = (1 << d) - 1 if d < 64 else np.uint64(0xFFFFFFFFFFFFFFFF)
+    keys = rng.integers(0, hi_dom, n, dtype=np.uint64)
+    lay = basic_layout(d, n, bits_per_key=16.0, delta=delta)
+    f, state = _build(lay, keys)
+    lo = rng.integers(0, hi_dom, 4000, dtype=np.uint64)
+    span = rng.integers(0, 1 << 14, 4000, dtype=np.uint64)
+    hi = np.minimum(lo + span, np.uint64(hi_dom))
+    res = np.asarray(f.range(state, jnp.asarray(lo, f.kdtype),
+                             jnp.asarray(hi, f.kdtype)))
+    truth = brute_force_range_truth(keys, lo, hi)
+    assert not (truth & ~res).any()
+
+
+def test_tuned_layout_with_exact_segment(rng):
+    lay = FilterLayout(
+        d=32, deltas=(7, 7, 4, 2), replicas=(1, 1, 1, 2),
+        seg_of_layer=(2, 2, 1, 1),
+        seg_bits=(1 << 12, 4096, 8192), exact_seg=0)
+    n = 300
+    keys = rng.integers(0, (1 << 32) - 1, n, dtype=np.uint64)
+    f, state = _build(lay, keys)
+    lo = rng.integers(0, (1 << 32) - 1, 3000, dtype=np.uint64)
+    hi = np.minimum(lo + np.uint64(1 << 10), np.uint64((1 << 32) - 1))
+    res = np.asarray(f.range(state, jnp.asarray(lo, f.kdtype),
+                             jnp.asarray(hi, f.kdtype)))
+    truth = brute_force_range_truth(keys, lo, hi)
+    assert not (truth & ~res).any()
+    fpr = (res & ~truth).mean()
+    assert fpr < 0.2
+
+
+def test_advisor_layout_end_to_end(rng):
+    n = 50_000
+    res = advise(d=64, n=n, m_bits=16 * n, R=1e6)
+    f = BloomRF(res.layout)
+    keys = rng.integers(0, 1 << 63, n, dtype=np.uint64)
+    state = f.build_np(keys)
+    lo = rng.integers(0, 1 << 63, 4000, dtype=np.uint64)
+    hi = lo + np.uint64(1 << 16)
+    r = np.asarray(f.range(state, jnp.asarray(lo), jnp.asarray(hi)))
+    truth = brute_force_range_truth(keys, lo, hi)
+    assert not (truth & ~r).any()
+    fpr = (r & ~truth).sum() / max((~truth).sum(), 1)
+    assert fpr < 10 * max(res.fpr_range_max, 0.01)
+
+
+def test_paper_worked_example_fpr_model():
+    """Paper §7: n=3, d=16, Δ=4, m=32 -> p≈0.683, fpr_15≈0.95, point≈1%."""
+    lay = FilterLayout(d=16, deltas=(4,) * 4, replicas=(1,) * 4,
+                       seg_of_layer=(0,) * 4, seg_bits=(32,))
+    assert lay.total_bits == 32
+    lm = level_fprs(lay, n=3)
+    assert abs(lm.p_seg[0] - 0.683) < 0.01
+    assert abs(lm.fpr[15] - 0.95) < 0.01
+    assert abs(lm.fpr[0] - 0.0148) < 0.005
+
+
+def test_paper_section6_space_claims():
+    """§6: basic bloomRF at 17 bpk handles R=2^14 at ~1.5%; 22 bpk -> 2^21
+    at ~2.5%."""
+    n = 50_000_000
+    assert abs(basic_range_fpr(64, n, 17 * n, 2 ** 14) - 0.015) < 0.005
+    assert abs(basic_range_fpr(64, n, 22 * n, 2 ** 21) - 0.025) < 0.01
+
+
+def test_advisor_matches_paper_tuning_example():
+    """§7 advisor: n=50M, 16 bpk, R=1e10 -> ~0.5% point, ~3% range FPR."""
+    res = advise(d=64, n=50_000_000, m_bits=16 * 50_000_000, R=1e10)
+    assert res.layout.deltas[:4] == (7, 7, 7, 7)
+    assert 0.002 < res.fpr_point < 0.01
+    assert 0.01 < res.fpr_range_max < 0.06
+
+
+def test_empirical_fpr_tracks_model(rng):
+    n = 100_000
+    lay = basic_layout(64, n, bits_per_key=17.0, delta=7)
+    f = BloomRF(lay)
+    keys = rng.integers(0, 1 << 63, n, dtype=np.uint64)
+    state = f.build_np(keys)
+    lo = rng.integers(0, 1 << 63, 20_000, dtype=np.uint64)
+    hi = lo + np.uint64(2 ** 14 - 1)
+    r = np.asarray(f.range(state, jnp.asarray(lo), jnp.asarray(hi)))
+    truth = brute_force_range_truth(keys, lo, hi)
+    emp = (r & ~truth).sum() / max((~truth).sum(), 1)
+    model = basic_range_fpr(64, n, 17.0 * n, 2 ** 14)
+    assert emp <= 2.0 * model + 0.01  # eq. (6) is an upper bound
+
+
+def test_online_insert_matches_bulk(rng):
+    lay = basic_layout(32, 500, bits_per_key=12.0, delta=6)
+    f = BloomRF(lay)
+    keys = rng.integers(0, (1 << 32) - 1, 500, dtype=np.uint64)
+    bulk = f.build(jnp.asarray(keys, f.kdtype))
+    online = f.insert_online(f.init_state(), jnp.asarray(keys, f.kdtype))
+    assert (np.asarray(bulk) == np.asarray(online)).all()
+    npb = f.build_np(keys)
+    assert (np.asarray(bulk) == np.asarray(npb)).all()
+
+
+def test_word_access_bounds():
+    lay = basic_layout(64, 10_000, 16.0, delta=7)
+    f = BloomRF(lay)
+    # paper: <= 4 word accesses per layer (+ coverings), O(k) total
+    assert f.word_accesses_per_range_query() <= 6 * lay.k
+    assert f.word_accesses_per_point_query() == lay.k

@@ -1,0 +1,83 @@
+"""Hypothesis property tests on bloomRF's invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BloomRF, basic_layout
+from repro.core.codecs import (float64_to_u64, u64_to_float64,
+                               string_point_code, string_range_bounds,
+                               pack2x32)
+
+_settings = settings(max_examples=40, deadline=None)
+
+
+@_settings
+@given(
+    d=st.sampled_from([8, 12, 16]),
+    delta=st.integers(1, 7),
+    bpk=st.sampled_from([8.0, 12.0, 20.0]),
+    seed=st.integers(0, 2 ** 16),
+    data=st.data(),
+)
+def test_never_false_negative(d, delta, bpk, seed, data):
+    rng = np.random.default_rng(seed)
+    n = data.draw(st.integers(1, 40))
+    keys = rng.integers(0, (1 << d) - 1, n, dtype=np.uint64)
+    lay = basic_layout(d, n, bits_per_key=bpk, delta=min(delta, d),
+                       seed=seed + 1)
+    f = BloomRF(lay)
+    state = f.build(jnp.asarray(keys, f.kdtype))
+    # every inserted key found
+    assert np.asarray(f.point(state, jnp.asarray(keys, f.kdtype))).all()
+    # ranges straddling inserted keys always positive
+    ks = np.sort(keys)
+    lo = np.maximum(ks, 3) - 3
+    hi = np.minimum(ks + 5, (1 << d) - 1)
+    r = np.asarray(f.range(state, jnp.asarray(lo, f.kdtype),
+                           jnp.asarray(hi, f.kdtype)))
+    assert r.all()
+
+
+@_settings
+@given(st.lists(st.floats(allow_nan=False, width=64), min_size=2,
+                max_size=50))
+def test_float_codec_is_monotone(xs):
+    xs = np.asarray(sorted(xs), np.float64)
+    codes = float64_to_u64(xs)
+    assert (np.diff(codes.astype(np.float64)) >= 0).all()
+    back = u64_to_float64(codes)
+    assert np.array_equal(back, xs, equal_nan=True)
+
+
+@_settings
+@given(st.text(min_size=0, max_size=20), st.text(min_size=0, max_size=20))
+def test_string_codec_order(a, b):
+    lo, hi = sorted([a, b])
+    clo, chi = string_range_bounds(lo, hi)
+    assert clo <= chi
+    p = string_point_code(lo)
+    assert clo <= p  # point code of the lower bound falls inside its range
+
+
+@_settings
+@given(st.integers(0, 2 ** 32 - 1), st.integers(0, 2 ** 32 - 1))
+def test_multiattr_pack_roundtrip(a, b):
+    code = pack2x32(a, b)
+    assert int(code) >> 32 == a
+    assert int(code) & 0xFFFFFFFF == b
+
+
+@_settings
+@given(seed=st.integers(0, 1000), data=st.data())
+def test_range_query_superset_of_point(seed, data):
+    """range(x, x) must imply >= point(x) positives (same DI, coarser)."""
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, (1 << 16) - 1, 30, dtype=np.uint64)
+    lay = basic_layout(16, 30, 12.0, delta=4, seed=seed)
+    f = BloomRF(lay)
+    state = f.build(jnp.asarray(keys, f.kdtype))
+    qs = rng.integers(0, (1 << 16) - 1, 200, dtype=np.uint64)
+    p = np.asarray(f.point(state, jnp.asarray(qs, f.kdtype)))
+    r = np.asarray(f.range(state, jnp.asarray(qs, f.kdtype),
+                           jnp.asarray(qs, f.kdtype)))
+    assert not (p & ~r).any()

@@ -1,0 +1,103 @@
+"""Distribution layer tests that need multiple devices run as subprocesses
+(device count must be fixed before jax initializes), plus the dry-run smoke
+and the HLO cost-model validation."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+_SRC = os.path.join(_ROOT, "src")
+
+
+def _run(script: str, devices: int = 8, timeout=900):
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=_SRC, JAX_PLATFORMS="cpu")
+    return subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_pipeline_parallel_matches_sequential():
+    r = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.dist.pipeline import pipeline_apply
+mesh = jax.make_mesh((4,), ("pod",))
+def stage_fn(w, x): return x * w["a"] + w["b"]
+params = {"a": jnp.arange(1., 5., dtype=jnp.float32),
+          "b": jnp.full((4,), 0.5, jnp.float32)}
+x = jnp.arange(8., dtype=jnp.float32).reshape(8, 1)
+out = pipeline_apply(stage_fn, params, x, mesh, "pod", n_microbatches=4)
+exp = x
+for s in range(4): exp = exp * (s + 1.) + 0.5
+assert np.allclose(np.asarray(out), np.asarray(exp)), (out, exp)
+print("PIPELINE-OK")
+""", devices=4)
+    assert "PIPELINE-OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_make_shardings_smoke_mesh():
+    r = _run("""
+import jax
+from repro.configs import get_config
+from repro.models import get_model, SHAPES
+from repro.dist.sharding import make_shardings
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+for arch in ("qwen3-1.7b", "mamba2-130m", "zamba2-2.7b", "whisper-base"):
+    cfg = get_config(arch, smoke=True)
+    model = get_model(cfg)
+    for shp in ("train_4k", "decode_32k"):
+        sh = make_shardings(model, mesh, SHAPES[shp])
+        assert sh.params is not None
+print("SHARDINGS-OK")
+""", devices=8)
+    assert "SHARDINGS-OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_dryrun_smoke_cells(tmp_path):
+    """Lower+compile smoke configs on the REAL production meshes (512
+    placeholder devices), single and multi pod."""
+    out = tmp_path / "dry.json"
+    env = dict(os.environ, PYTHONPATH=_SRC)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--smoke",
+         "--arch", "qwen3-1.7b,mamba2-130m,moonshot-v1-16b-a3b",
+         "--shape", "train_4k,decode_32k",
+         "--mesh", "both", "--out", str(out)],
+        env=env, capture_output=True, text=True, timeout=1800, cwd=_ROOT)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    recs = json.loads(out.read_text())
+    assert all(x["status"] == "ok" for x in recs), recs
+
+
+@pytest.mark.slow
+def test_hlo_cost_matches_unrolled_oracle():
+    r = _run("""
+import jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.models import get_model
+from repro.models.config import Shape
+from repro.launch.hlo_cost import analyze_hlo
+from repro.models.act import unrolled_scans
+for arch in ("qwen3-1.7b", "moonshot-v1-16b-a3b", "whisper-base"):
+    cfg = get_config(arch, smoke=True)
+    model = get_model(cfg)
+    shape = Shape("t", 64, 8, "train")
+    psds = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                        model.table(), is_leaf=lambda x: hasattr(x, "axes"))
+    batch = model.input_specs(shape)
+    def f(p, b): return model.loss(p, b)
+    hc = analyze_hlo(jax.jit(f).lower(psds, batch).compile().as_text())
+    def g(p, b): return model.loss(p, b)
+    with unrolled_scans():
+        c2 = jax.jit(g).lower(psds, batch).compile()
+    ca = c2.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    ratio = hc.flops / max(float(ca.get("flops", 0)), 1)
+    assert 0.85 < ratio < 1.15, (arch, ratio)
+print("HLOCOST-OK")
+""", devices=16, timeout=1200)
+    assert "HLOCOST-OK" in r.stdout, r.stdout + r.stderr

@@ -1,0 +1,83 @@
+"""Baseline filters: no false negatives + sane FPR/size accounting."""
+import numpy as np
+import pytest
+
+from conftest import brute_force_range_truth
+from repro.filters import (BloomFilter, BloomRFAdapter, CuckooFilter,
+                           FencePointers, PrefixBloomFilter, Rosetta,
+                           SuRFLite)
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(5)
+    keys = rng.integers(0, 1 << 63, 50_000, dtype=np.uint64)
+    lo = rng.integers(0, 1 << 63, 5_000, dtype=np.uint64)
+    hi = lo + np.uint64(2 ** 10 - 1)
+    pq = np.concatenate([keys[:500],
+                         rng.integers(0, 1 << 63, 2000, dtype=np.uint64)])
+    return keys, lo, hi, pq
+
+
+RANGE_FILTERS = [
+    ("bloomrf", lambda: BloomRFAdapter(16, mode="basic")),
+    ("bloomrf-tuned", lambda: BloomRFAdapter(18, mode="tuned", R=2 ** 20)),
+    ("rosetta", lambda: Rosetta(18, max_range_log2=10)),
+    ("surf", lambda: SuRFLite.for_budget(16)),
+    ("prefix-bf", lambda: PrefixBloomFilter(16, prefix_level=10)),
+    ("minmax", lambda: FencePointers(16)),
+]
+
+
+@pytest.mark.parametrize("name,mk", RANGE_FILTERS)
+def test_range_no_false_negative(data, name, mk):
+    keys, lo, hi, _ = data
+    f = mk()
+    f.build(keys)
+    res = f.range(lo, hi)
+    truth = brute_force_range_truth(keys, lo, hi)
+    assert not (truth & ~res).any(), f"{name} produced range false negatives"
+    fpr = (res & ~truth).sum() / max((~truth).sum(), 1)
+    assert fpr <= 1.0
+    assert f.size_bits() > 0
+
+
+POINT_FILTERS = [
+    ("bf", lambda: BloomFilter(12)),
+    ("cuckoo", lambda: CuckooFilter(12)),
+    ("bloomrf", lambda: BloomRFAdapter(14, mode="basic")),
+    ("surf-hash", lambda: SuRFLite(suffix_bits=8, mode="hash")),
+]
+
+
+@pytest.mark.parametrize("name,mk", POINT_FILTERS)
+def test_point_no_false_negative(data, name, mk):
+    keys, _, _, pq = data
+    f = mk()
+    f.build(keys[:20_000])
+    res = f.point(pq)
+    truth = np.isin(pq, keys[:20_000])
+    assert not (truth & ~res).any(), f"{name} produced point false negatives"
+    fpr = (res & ~truth).sum() / max((~truth).sum(), 1)
+    assert fpr < 0.25, f"{name} point FPR {fpr} unreasonable"
+
+
+def test_rosetta_doubting_reduces_fpr(data):
+    keys, lo, hi, _ = data
+    lo16 = lo
+    hi16 = lo + np.uint64(15)
+    deep = Rosetta(20, max_range_log2=4)
+    deep.build(keys)
+    r = deep.range(lo16, hi16)
+    truth = brute_force_range_truth(keys, lo16, hi16)
+    fpr = (r & ~truth).sum() / max((~truth).sum(), 1)
+    assert fpr < 0.05  # small ranges with budget: Rosetta's sweet spot
+
+
+def test_fence_pointers_exact_on_sorted_dense():
+    keys = np.arange(10_000, dtype=np.uint64) * 2
+    f = FencePointers(16)
+    f.build(keys)
+    assert f.range(np.asarray([0]), np.asarray([5]))[0]
+    # far outside the key span -> definitely negative
+    assert not f.range(np.asarray([10 ** 9]), np.asarray([10 ** 9 + 5]))[0]
