@@ -1,0 +1,85 @@
+"""Sharded filter-bank probe throughput vs the single-device paths.
+
+Compares, at fixed total key count and bits/key:
+  * core      — one monolithic BloomRF (XLA, the ops.py fallback path)
+  * kernel    — one monolithic filter through the Pallas resident kernels
+  * bank      — FilterBank (range-partitioned, vmap on one device)
+  * sharded   — ShardedFilterBank over every host device (shard_map)
+
+Run with faked devices to see the scaling shape on CPU:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python benchmarks/dist_bench.py --shards 8 --queries 200000
+
+Output: csv ``name,us_per_query,detail`` rows (benchmarks/common.py idiom).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from common import emit  # noqa: F401  (path bootstrap side effect)
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import BloomRF, basic_layout
+from repro.dist.filter_bank import FilterBank, ShardedFilterBank
+from repro.kernels import FilterOps
+
+
+def _time(fn, *args, repeat: int = 3):
+    jax.block_until_ready(fn(*args))  # compile + drain the warm-up
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / repeat
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--keys", type=int, default=100_000)
+    ap.add_argument("--queries", type=int, default=200_000)
+    ap.add_argument("--shards", type=int, default=len(jax.devices()))
+    ap.add_argument("--bits-per-key", type=float, default=14.0)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0xB100F)
+    keys = rng.integers(0, 1 << 32, args.keys, dtype=np.uint64
+                        ).astype(np.uint32)
+    qs = rng.integers(0, 1 << 32, args.queries, dtype=np.uint64
+                      ).astype(np.uint32)
+    lo64 = rng.integers(0, 1 << 32, args.queries, dtype=np.uint64)
+    hi = np.minimum(lo64 + (1 << 10), (1 << 32) - 1).astype(np.uint32)
+    lo = lo64.astype(np.uint32)
+    jq, jlo, jhi = jnp.asarray(qs), jnp.asarray(lo), jnp.asarray(hi)
+
+    lay = basic_layout(32, args.keys, args.bits_per_key, delta=6)
+    core = BloomRF(lay)
+    st = core.build(jnp.asarray(keys))
+    ops = FilterOps(lay)
+    bank = FilterBank(32, args.shards, args.keys, args.bits_per_key, delta=6)
+    bst = bank.build(jnp.asarray(keys))
+    # largest device count the shard rows divide over
+    n_dev = len(jax.devices())
+    while args.shards % n_dev:
+        n_dev -= 1
+    sb = ShardedFilterBank(bank, jax.make_mesh((n_dev,), ("data",)), "data")
+    sst = sb.shard_state(bst)
+
+    Q = args.queries
+    for name, pf, rf in [
+        ("core", lambda: core.point(st, jq), lambda: core.range(st, jlo, jhi)),
+        ("kernel", lambda: ops.point(st, jq), lambda: ops.range(st, jlo, jhi)),
+        ("bank", lambda: bank.point(bst, jq), lambda: bank.range(bst, jlo, jhi)),
+        ("sharded", lambda: sb.point(sst, jq), lambda: sb.range(sst, jlo, jhi)),
+    ]:
+        emit(f"{name}/point", _time(lambda *_: pf()) / Q * 1e6,
+             f"devices={len(jax.devices())},shards={args.shards}")
+        emit(f"{name}/range", _time(lambda *_: rf()) / Q * 1e6,
+             f"devices={len(jax.devices())},shards={args.shards}")
+
+
+if __name__ == "__main__":
+    main()

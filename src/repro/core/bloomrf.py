@@ -104,16 +104,27 @@ class BloomRF:
     # ------------------------------------------------------------------
     # insertion
     # ------------------------------------------------------------------
+    def scatter_or(self, state: jax.Array, pos: jax.Array,
+                   vals: Optional[jax.Array] = None) -> jax.Array:
+        """OR bit positions into the packed state via a transient
+        bit-expanded buffer.  ``vals`` (optional, same shape as ``pos``)
+        masks which positions take effect — the sharded filter bank uses it
+        to drop keys owned by other shards while keeping this lane-packing
+        convention in one place."""
+        temp = jnp.zeros(self.layout.total_bits, jnp.bool_)
+        temp = (temp.at[pos].set(True) if vals is None
+                else temp.at[pos].max(vals))
+        lanes = temp.reshape(-1, 32).astype(jnp.uint32)
+        packed = jnp.sum(lanes << jnp.arange(32, dtype=jnp.uint32)[None, :],
+                         axis=1, dtype=jnp.uint32)
+        return state | packed
+
     def insert(self, state: jax.Array, keys) -> jax.Array:
         """Bulk insert: scatter into a transient bit-expanded buffer, pack,
         OR into the packed state.  Exact w.r.t. duplicate positions."""
         keys = jnp.atleast_1d(jnp.asarray(keys, self.kdtype))
         pos = jax.vmap(self._positions_one)(keys).reshape(-1)
-        temp = jnp.zeros(self.layout.total_bits, jnp.bool_).at[pos].set(True)
-        lanes = temp.reshape(-1, 32).astype(jnp.uint32)
-        packed = jnp.sum(lanes << jnp.arange(32, dtype=jnp.uint32)[None, :],
-                         axis=1, dtype=jnp.uint32)
-        return state | packed
+        return self.scatter_or(state, pos)
 
     def insert_online(self, state: jax.Array, keys) -> jax.Array:
         """Streaming insert (no O(m) temp): sequential read-modify-write OR.

@@ -1,0 +1,25 @@
+"""Distribution layer: sharding specs, pipeline parallelism, gradient/state
+compression and the sharded bloomRF filter bank.
+
+Modules:
+  sharding     — NamedSharding trees for params/batch/cache of every model
+  pipeline     — microbatched pipeline parallelism over a mesh axis
+  compression  — int8 error-feedback gradient compression + Elias-Fano
+                 encoding of sorted posting lists / filter-state snapshots
+  filter_bank  — BloomRF filter bank range-partitioned across a device mesh
+"""
+from .sharding import Shardings, batch_axes_for, make_shardings, mesh_axis_sizes
+from .pipeline import pipeline_apply
+from .compression import (ef_compress, ef_init, elias_fano_decode,
+                          elias_fano_encode, elias_fano_size_bits,
+                          pack_filter_state, unpack_filter_state)
+from .filter_bank import FilterBank, ShardedFilterBank
+
+__all__ = [
+    "Shardings", "batch_axes_for", "make_shardings", "mesh_axis_sizes",
+    "pipeline_apply",
+    "ef_init", "ef_compress", "elias_fano_encode", "elias_fano_decode",
+    "elias_fano_size_bits",
+    "pack_filter_state", "unpack_filter_state",
+    "FilterBank", "ShardedFilterBank",
+]

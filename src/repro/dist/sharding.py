@@ -1,0 +1,125 @@
+"""NamedSharding trees for every registered model config.
+
+``make_shardings(model, mesh, shape)`` is the single entry point used by the
+dry-run, the profiler and the launchers: it turns a model's *logical* pspecs
+(``param_pspecs`` / ``batch_pspecs`` / ``cache_pspecs``) into physical
+``NamedSharding``s on ``mesh``, dropping any axis that does not divide its
+dim exactly (jit argument shardings must divide; uneven activation shardings
+are handled separately via ``models/act.py`` constraints, which GSPMD pads).
+
+Mesh conventions (launch/mesh.py): batch/FSDP over ("pod","data"); TP/EP
+over "model"; "pod" alternatively drives the pipeline (dist/pipeline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+__all__ = ["Shardings", "batch_axes_for", "make_shardings",
+           "mesh_axis_sizes"]
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict:
+    """{axis name: size} of a mesh."""
+    return dict(mesh.shape)
+
+
+def batch_axes_for(mesh: Mesh):
+    """Physical axes backing the logical batch/FSDP dim, as one PS entry."""
+    if "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return ("data",)
+
+
+def _axes_size(mesh_shape: dict, axes) -> int:
+    """Total device count of a PartitionSpec entry (None/str/tuple).
+    0 when any named axis is absent from the mesh (-> replicate)."""
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    total = 1
+    for a in axes:
+        if a not in mesh_shape:
+            return 0
+        total *= mesh_shape[a]
+    return total
+
+
+def _sanitize(mesh: Mesh, specs, sds_tree):
+    """Replicate every spec entry whose axes do not divide the dim exactly."""
+    msz = mesh_axis_sizes(mesh)
+    is_ps = lambda x: isinstance(x, PS)
+
+    def fix(ps: PS, s) -> PS:
+        entries = tuple(ps) + (None,) * (len(s.shape) - len(tuple(ps)))
+        out = []
+        for dim, entry in zip(s.shape, entries):
+            sz = _axes_size(msz, entry)
+            out.append(entry if entry is not None and sz > 0 and
+                       dim % sz == 0 else None)
+        return PS(*out)
+
+    spec_leaves, treedef = jax.tree.flatten(specs, is_leaf=is_ps)
+    sds_leaves = jax.tree.leaves(sds_tree)
+    assert len(spec_leaves) == len(sds_leaves), (specs, sds_tree)
+    return jax.tree.unflatten(
+        treedef, [fix(p, s) for p, s in zip(spec_leaves, sds_leaves)])
+
+
+def _drop_missing_axes(mesh: Mesh, specs):
+    """Replicate spec entries naming axes this mesh does not have (the
+    logical rules in models/params.py mention "model"/"pod" unconditionally)."""
+    names = set(mesh.axis_names)
+
+    def fix(ps: PS) -> PS:
+        out = []
+        for entry in tuple(ps):
+            axes = () if entry is None else (
+                (entry,) if isinstance(entry, str) else tuple(entry))
+            out.append(entry if all(a in names for a in axes) else None)
+        return PS(*out)
+
+    return jax.tree.map(fix, specs, is_leaf=lambda x: isinstance(x, PS))
+
+
+def _named(mesh: Mesh, specs):
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps), specs,
+                        is_leaf=lambda x: isinstance(x, PS))
+
+
+@dataclasses.dataclass(frozen=True)
+class Shardings:
+    """Physical shardings for one (model, mesh, shape) cell."""
+    params: Any          # NamedSharding tree matching model.table()
+    batch: Any           # NamedSharding tree matching model.input_specs(shape)
+    cache: Any           # NamedSharding tree matching model.cache_specs(shape)
+    out_scalar: Any      # replicated scalar (losses / metrics)
+    mesh: Mesh
+
+
+def make_shardings(model, mesh: Mesh, shape) -> Shardings:
+    msz = mesh_axis_sizes(mesh)
+    ba = batch_axes_for(mesh)
+
+    param_specs = _drop_missing_axes(mesh,
+                                     model.param_pspecs(msz, fsdp_axes=ba))
+
+    batch_specs = _sanitize(mesh, model.batch_pspecs(shape, ba),
+                            model.input_specs(shape))
+
+    # KV/state head dims shard over "model" when divisible; _sanitize drops
+    # the axis per-leaf otherwise (e.g. whisper's 8 heads on a 16-way axis).
+    cache_specs = _sanitize(mesh, model.cache_pspecs(shape, ba, "model"),
+                            model.cache_specs(shape))
+
+    return Shardings(
+        params=_named(mesh, param_specs),
+        batch=_named(mesh, batch_specs),
+        cache=_named(mesh, cache_specs),
+        out_scalar=NamedSharding(mesh, PS()),
+        mesh=mesh,
+    )

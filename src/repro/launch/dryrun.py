@@ -25,7 +25,6 @@ Usage:
 import argparse
 import dataclasses
 import json
-import re
 import time
 import traceback
 
@@ -46,71 +45,6 @@ from .mesh import make_production_mesh
 PEAK_FLOPS = 197e12         # bf16 / chip
 HBM_BW = 819e9              # bytes/s / chip
 ICI_BW = 50e9               # bytes/s / link
-
-_DT_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
-}
-
-_COLLECTIVES = (
-    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-    "collective-permute", "collective-broadcast", "ragged-all-to-all",
-)
-
-
-# ---------------------------------------------------------------------------
-# HLO parsing
-# ---------------------------------------------------------------------------
-
-def _type_bytes(tstr: str) -> int:
-    """bytes of an HLO type string: 'bf16[8,16]{1,0}' or '(f32[2], u32[])'."""
-    total = 0
-    for m in re.finditer(r"(\w+)\[([\d,]*)\]", tstr):
-        dt, dims = m.group(1), m.group(2)
-        if dt not in _DT_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DT_BYTES[dt]
-    return total
-
-
-_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?([%\w\.\-]+)\s*=\s*((?:\([^=]*?\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s+([\w\-]+)\(")
-
-
-def parse_collectives(hlo: str) -> dict:
-    """Sum operand bytes of collective ops in post-optimization HLO.
-
-    Returns {"total": bytes, per-op-kind breakdown}.  Async pairs are counted
-    on the -start op only.  Shapes in partitioned HLO are per-device.
-    """
-    defs: dict = {}
-    pending = []
-    for line in hlo.splitlines():
-        m = _DEF_RE.match(line)
-        if not m:
-            continue
-        name, tstr, op = m.groups()
-        defs[name] = _type_bytes(tstr)
-        base = op[:-6] if op.endswith("-start") else op
-        if op.endswith("-done"):
-            continue
-        if base in _COLLECTIVES:
-            args = line.split(op + "(", 1)[1].split(")", 1)[0]
-            operands = [a.strip() for a in args.split(",") if
-                        a.strip().startswith("%") or
-                        a.strip().split(".")[0] in ("", ) or True]
-            pending.append((base, [a.strip() for a in args.split(",")]))
-    out = {"total": 0}
-    for base, operands in pending:
-        b = sum(defs.get(o, 0) for o in operands)
-        out["total"] += b
-        out[base] = out.get(base, 0) + b
-    return out
-
 
 # ---------------------------------------------------------------------------
 # step builders

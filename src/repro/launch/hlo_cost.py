@@ -107,6 +107,47 @@ _OP_RE = re.compile(
     r"((?:\(.*?\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s+([\w\-]+)\((.*)$")
 
 
+def _operand_names(rest: str) -> list:
+    """Operand names of an op given everything after ``opcode(``.
+
+    Operand references in optimized HLO carry full type annotations
+    (``f32[8,64]{1,0} %name``) whose brackets contain commas, and tuple
+    types contain parens — so the operand list must be cut at the
+    depth-matching close paren and names taken as the ``%name`` tokens
+    (attributes after the close paren, e.g. ``body=%region``, excluded).
+    Sigil-less print styles (no ``%``) fall back to the last token of each
+    top-level comma-separated operand."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                rest = rest[:i]
+                break
+    names = re.findall(r"%([\w\.\-]+)", rest)
+    if names or not rest.strip():
+        return names
+    out = []
+    depth = 0
+    start = 0
+    for i, ch in enumerate(rest):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            tok = rest[start:i].strip().split()
+            if tok:
+                out.append(tok[-1])
+            start = i + 1
+    tok = rest[start:].strip().split()
+    if tok:
+        out.append(tok[-1])
+    return out
+
+
 def _parse_module(hlo: str):
     comps: dict = {}
     cur = None
@@ -124,10 +165,8 @@ def _parse_module(hlo: str):
         mo = _OP_RE.match(line)
         if mo and cur is not None:
             name, tstr, opcode, rest = mo.groups()
-            args = rest.split(")", 1)[0]
-            operands = [a.strip().lstrip("%") for a in args.split(",")
-                        if a.strip()]
-            cur.ops.append(_Op(name, opcode, tstr, operands, line))
+            cur.ops.append(_Op(name, opcode, tstr, _operand_names(rest),
+                               line))
     return comps, entry
 
 

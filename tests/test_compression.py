@@ -1,0 +1,52 @@
+"""Elias-Fano posting lists and filter-state snapshots (dist/compression.py).
+The int8 error-feedback path is covered by tests/test_train.py."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import BloomRF, basic_layout
+from repro.dist.compression import (elias_fano_decode, elias_fano_encode, elias_fano_size_bits,
+                                    pack_filter_state, unpack_filter_state)
+
+
+@pytest.mark.parametrize("n,u", [
+    (0, 100), (1, 10), (1000, 1 << 20), (5000, 1 << 40), (64, 64),
+    (3000, 1 << 63),
+])
+def test_ef_roundtrip_sorted_posting_lists(rng, n, u):
+    v = np.sort(rng.integers(0, u, n, dtype=np.uint64))
+    enc = elias_fano_encode(v, universe=u)
+    assert np.array_equal(elias_fano_decode(enc), v)
+
+
+def test_ef_roundtrip_with_duplicates(rng):
+    v = np.sort(rng.integers(0, 500, 2000, dtype=np.uint64))
+    enc = elias_fano_encode(v, universe=500)
+    assert np.array_equal(elias_fano_decode(enc), v)
+
+
+def test_ef_size_is_quasi_succinct(rng):
+    """n(2 + ceil(log2(u/n))) bits, far below 64 n for dense-ish lists."""
+    n, u = 10_000, 1 << 24
+    v = np.sort(rng.integers(0, u, n, dtype=np.uint64))
+    bits = elias_fano_size_bits(elias_fano_encode(v, universe=u))
+    assert bits <= n * (2 + int(np.ceil(np.log2(u / n))) + 1)
+    assert bits < 64 * n / 4
+
+
+def test_ef_rejects_unsorted_and_out_of_universe():
+    with pytest.raises(ValueError):
+        elias_fano_encode(np.asarray([3, 1, 2], np.uint64))
+    with pytest.raises(ValueError):
+        elias_fano_encode(np.asarray([5], np.uint64), universe=5)
+
+
+def test_filter_state_snapshot_roundtrip(rng):
+    lay = basic_layout(32, 3000, 16.0, delta=6)
+    f = BloomRF(lay)
+    keys = rng.integers(0, 1 << 32, 3000, dtype=np.uint64).astype(np.uint32)
+    state = np.asarray(f.build(jnp.asarray(keys)))
+    enc = pack_filter_state(state)
+    assert np.array_equal(unpack_filter_state(enc, lay.total_u32), state)
+    # sparse fill curve -> snapshot beats the raw bitmap
+    assert elias_fano_size_bits(enc) < 32 * lay.total_u32

@@ -1,0 +1,61 @@
+"""HLO cost-model parser: operand extraction and trip-count flop scaling
+on synthetic modules (the full-model oracle check is the slow test in
+test_dist_and_dryrun.py)."""
+from repro.launch.hlo_cost import _operand_names, analyze_hlo
+
+_MODULE = """\
+HloModule jit_f
+
+%body.1 (p.0: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p.0 = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[8,16]{1,0}) %p.0), index=0
+  %x = f32[8,16]{1,0} get-tuple-element((s32[], f32[8,16]{1,0}) %p.0), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %y = f32[8,16]{1,0} dot(f32[8,16]{1,0} %x, f32[16,16]{1,0} %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %c1 = s32[] constant(1)
+  %i2 = s32[] add(s32[] %i, s32[] %c1)
+  ROOT %t = (s32[], f32[8,16]{1,0}) tuple(s32[] %i2, f32[8,16]{1,0} %y)
+}
+
+%cond.1 (p.1: (s32[], f32[8,16])) -> pred[] {
+  %p.1 = (s32[], f32[8,16]{1,0}) parameter(0)
+  %it = s32[] get-tuple-element((s32[], f32[8,16]{1,0}) %p.1), index=0
+  %trips = s32[] constant(24)
+  ROOT %lt = pred[] compare(s32[] %it, s32[] %trips), direction=LT
+}
+
+ENTRY %main.1 (a.0: f32[8,16]) -> (s32[], f32[8,16]) {
+  %a.0 = f32[8,16]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[8,16]{1,0}) tuple(s32[] %z, f32[8,16]{1,0} %a.0)
+  ROOT %wh = (s32[], f32[8,16]{1,0}) while((s32[], f32[8,16]{1,0}) %init), condition=%cond.1, body=%body.1
+}
+"""
+
+
+def test_operand_names_with_type_annotations():
+    rest = ("f32[8,64,64]{2,1,0} %get-tuple-element.331, "
+            "f32[64,32]{1,0} %dynamic-slice_fusion.5), "
+            "lhs_contracting_dims={2}, body=%region_0.1")
+    assert _operand_names(rest) == ["get-tuple-element.331",
+                                    "dynamic-slice_fusion.5"]
+
+
+def test_operand_names_tuple_types_and_attrs_excluded():
+    rest = "(f32[2]{0}, u32[]) %tuple.1), index=0, to_apply=%reducer.7"
+    assert _operand_names(rest) == ["tuple.1"]
+
+
+def test_operand_names_sigil_less_fallback():
+    rest = "f32[8,16]{1,0} x, f32[16,16]{1,0} w.1), lhs_contracting_dims={1}"
+    assert _operand_names(rest) == ["x", "w.1"]
+
+
+def test_analyze_hlo_scales_dot_flops_by_trip_count():
+    hc = analyze_hlo(_MODULE)
+    assert hc.while_trips == {"wh": 24}
+    # dot: 2 * numel(8x16) * k(16) per trip, 24 trips
+    assert hc.flops >= 24 * 2 * 8 * 16 * 16
+    # sigil-less print style must account identically
+    hc2 = analyze_hlo(_MODULE.replace("%", ""))
+    assert hc2.flops == hc.flops and hc2.while_trips == hc.while_trips

@@ -87,3 +87,87 @@ def test_kernel_rejects_64bit_domain():
     lay = basic_layout(64, 1000, 12.0, delta=7)
     with pytest.raises(ValueError):
         kref.check_kernel_layout(lay)
+
+
+# ---------------------------------------------------------------------------
+# kernel-vs-XLA parity across random layouts (multi-segment, replicas, any Δ)
+# ---------------------------------------------------------------------------
+
+def _random_kernel_layout(rng):
+    """Random kernel-eligible layout: d <= 32, 2 segments, replicas, no exact."""
+    d = int(rng.integers(16, 33))
+    deltas, rem = [], d
+    for _ in range(int(rng.integers(2, 5))):
+        if rem < 1:
+            break
+        deltas.append(int(min(rng.integers(1, 8), rem)))
+        rem -= deltas[-1]
+    k = len(deltas)
+    return FilterLayout(
+        d=d, deltas=tuple(deltas),
+        replicas=tuple(int(r) for r in rng.integers(1, 3, k)),
+        seg_of_layer=tuple(int(s) for s in rng.integers(0, 2, k)),
+        seg_bits=(8192, 4096), exact_seg=None,
+        seed=int(rng.integers(1 << 30)))
+
+
+@pytest.mark.parametrize("trial", range(6))
+def test_range_kernel_parity_random_layouts(trial):
+    trng = np.random.default_rng(0xC0FFEE + trial)
+    lay = _random_kernel_layout(trng)
+    f = BloomRF(lay)
+    hi_excl = 1 << lay.d if lay.d < 64 else (1 << 63)
+    keys = trng.integers(0, hi_excl, 600, dtype=np.uint64).astype(np.uint32)
+    state = f.build(jnp.asarray(keys))
+    lo = trng.integers(0, hi_excl, 400, dtype=np.uint64)
+    hi = np.minimum(lo + trng.integers(0, 1 << min(lay.d - 1, 12), 400,
+                                       dtype=np.uint64), hi_excl - 1)
+    lo = lo.astype(np.uint32)
+    hi = hi.astype(np.uint32)
+    want = np.asarray(kref.range_ref(lay, state, jnp.asarray(lo),
+                                     jnp.asarray(hi)))
+    got = np.asarray(range_probe_resident(lay, state, jnp.asarray(lo),
+                                          jnp.asarray(hi), 128, True))
+    assert (want == got).all(), lay.describe()
+    # same parity through the dispatcher: forced-XLA ops vs kernel ops
+    ops_xla = FilterOps(lay, interpret=True, vmem_budget_u32=1)
+    assert not ops_xla.resident
+    via_xla = np.asarray(ops_xla.range(state, jnp.asarray(lo),
+                                       jnp.asarray(hi)))
+    assert (via_xla == got).all()
+
+
+def test_exact_layout_range_kernel_raises():
+    """Exact-layer layouts must be rejected by the kernel path, as documented
+    in kernels/rangeprobe.py (bounded lane scan is XLA-only)."""
+    from repro.core.tuning import advise
+
+    lay = advise(16, 300, 16384, 64.0).layout
+    assert lay.has_exact
+    f = BloomRF(lay)
+    state = f.build(jnp.asarray(np.arange(300, dtype=np.uint32)))
+    lo = jnp.asarray(np.arange(10, dtype=np.uint32))
+    with pytest.raises(ValueError, match="exact-layer"):
+        range_probe_resident(lay, state, lo, lo, 128, True)
+
+
+def test_exact_layout_ops_falls_back_to_xla(rng):
+    """FilterOps.range on an exact-layer layout must silently take the XLA
+    path and stay bit-identical to the core filter."""
+    from repro.core.tuning import advise
+
+    lay = advise(16, 300, 16384, 64.0).layout
+    f = BloomRF(lay)
+    keys = rng.integers(0, 1 << 16, 300, dtype=np.uint64).astype(np.uint32)
+    ops = FilterOps(lay, interpret=True)
+    state = ops.insert(ops.init_state(), jnp.asarray(keys))
+    lo = rng.integers(0, 1 << 16, 500, dtype=np.uint64).astype(np.uint32)
+    hi = np.minimum(lo + 64, (1 << 16) - 1).astype(np.uint32)
+    got = np.asarray(ops.range(state, jnp.asarray(lo), jnp.asarray(hi)))
+    want = np.asarray(f.range(state, jnp.asarray(lo), jnp.asarray(hi)))
+    assert (want == got).all()
+    # straddling ranges must all be positive (no false negatives)
+    slo = np.maximum(keys.astype(np.int64) - 3, 0).astype(np.uint32)
+    shi = np.minimum(keys.astype(np.int64) + 3, (1 << 16) - 1).astype(np.uint32)
+    assert np.asarray(ops.range(state, jnp.asarray(slo),
+                                jnp.asarray(shi))).all()
