@@ -1,0 +1,7 @@
+"""Benchmark package: make ``src/`` importable before any submodule pulls
+in ``repro`` (so ``python -m benchmarks.run`` works without PYTHONPATH)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+os.environ.setdefault("JAX_ENABLE_X64", "1")

@@ -1,32 +1,43 @@
-"""Sharded filter-bank probe throughput vs the single-device paths.
+"""Sharded / multi-tenant filter-bank probe throughput vs the single-device
+paths, plus the Bloofi-style meta-filter skip-rate measurement.
 
 Compares, at fixed total key count and bits/key:
-  * core      — one monolithic BloomRF (XLA, the ops.py fallback path)
-  * kernel    — one monolithic filter through the Pallas resident kernels
-  * bank      — FilterBank (range-partitioned, vmap on one device)
-  * sharded   — ShardedFilterBank over every host device (shard_map)
+  * core       — one monolithic BloomRF (XLA, the ops.py fallback path)
+  * kernel     — one monolithic filter through the Pallas resident kernels
+  * bank       — FilterBank (range-partitioned, vmap on one device)
+  * sharded    — ShardedFilterBank over every host device (shard_map)
+  * tenant     — TenantFilterBank (vmapped multi-tenant reference)
+  * tenant-sharded / tenant-replicated — shard_map variants, tenant rows on
+    a data axis, optionally state replicated over a replica axis
+and reports the meta-filter skip rate: the fraction of candidate
+(probe, shard) pairs whose clipped sub-range the coarse per-shard filter
+proves empty, together with the implied word-access saving per range probe.
 
 Run with faked devices to see the scaling shape on CPU:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python benchmarks/dist_bench.py --shards 8 --queries 200000
 
-Output: csv ``name,us_per_query,detail`` rows (benchmarks/common.py idiom).
+Output: csv ``name,us_per_query,detail`` rows (benchmarks/common.py idiom);
+``--json PATH`` additionally writes the rows and the meta-filter stats as
+machine-readable JSON (consumed by the CI benchmark job).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
-
-import numpy as np
-
-from common import emit  # noqa: F401  (path bootstrap side effect)
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from common import emit
 
 from repro.core import BloomRF, basic_layout
 from repro.dist.filter_bank import FilterBank, ShardedFilterBank
+from repro.dist.tenant_bank import ShardedTenantFilterBank, TenantFilterBank
 from repro.kernels import FilterOps
+
+SCHEMA = "bloomrf-dist-bench/v1"
 
 
 def _time(fn, *args, repeat: int = 3):
@@ -37,13 +48,40 @@ def _time(fn, *args, repeat: int = 3):
     return (time.perf_counter() - t0) / repeat
 
 
+def _tenant_meshes(n_tenants: int):
+    """(label, mesh, data_axis, replica_axis) variants the host supports."""
+    n_dev = len(jax.devices())
+    data = n_dev
+    while n_tenants % data:
+        data -= 1
+    out = [("tenant-sharded", jax.make_mesh((data,), ("data",)),
+            "data", None)]
+    if n_dev >= 2 and n_dev % 2 == 0:
+        rdata = n_dev // 2
+        while n_tenants % rdata:
+            rdata -= 1
+        out.append(("tenant-replicated",
+                    jax.make_mesh((2, rdata), ("replica", "data")),
+                    "data", "replica"))
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--keys", type=int, default=100_000)
     ap.add_argument("--queries", type=int, default=200_000)
     ap.add_argument("--shards", type=int, default=len(jax.devices()))
+    ap.add_argument("--tenants", type=int, default=16)
+    ap.add_argument("--tenant-shards", type=int, default=4)
     ap.add_argument("--bits-per-key", type=float, default=14.0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows + meta-filter stats as JSON")
     args = ap.parse_args()
+
+    rows = []
+
+    def rec(name, us, detail):
+        rows.append(emit(name, us, detail))
 
     rng = np.random.default_rng(0xB100F)
     keys = rng.integers(0, 1 << 32, args.keys, dtype=np.uint64
@@ -69,16 +107,72 @@ def main() -> None:
     sst = sb.shard_state(bst)
 
     Q = args.queries
+    dev_detail = f"devices={len(jax.devices())},shards={args.shards}"
     for name, pf, rf in [
         ("core", lambda: core.point(st, jq), lambda: core.range(st, jlo, jhi)),
         ("kernel", lambda: ops.point(st, jq), lambda: ops.range(st, jlo, jhi)),
         ("bank", lambda: bank.point(bst, jq), lambda: bank.range(bst, jlo, jhi)),
         ("sharded", lambda: sb.point(sst, jq), lambda: sb.range(sst, jlo, jhi)),
     ]:
-        emit(f"{name}/point", _time(lambda *_: pf()) / Q * 1e6,
-             f"devices={len(jax.devices())},shards={args.shards}")
-        emit(f"{name}/range", _time(lambda *_: rf()) / Q * 1e6,
-             f"devices={len(jax.devices())},shards={args.shards}")
+        rec(f"{name}/point", _time(lambda *_: pf()) / Q * 1e6, dev_detail)
+        rec(f"{name}/range", _time(lambda *_: rf()) / Q * 1e6, dev_detail)
+
+    # -- multi-tenant bank -------------------------------------------------
+    T, S = args.tenants, args.tenant_shards
+    tb = TenantFilterBank(32, T, S, max(args.keys // T, 1),
+                          args.bits_per_key, delta=6)
+    tenants = rng.integers(0, T, args.keys).astype(np.uint32)
+    qt = jnp.asarray(rng.integers(0, T, Q).astype(np.uint32))
+    jt, jk = jnp.asarray(tenants), jnp.asarray(keys)
+    tstate, tmeta = tb.build(jt, jk)
+    t_detail = f"devices={len(jax.devices())},tenants={T},shards={S}"
+    rec("tenant/point", _time(lambda: tb.point(tstate, qt, jq)) / Q * 1e6,
+        t_detail)
+    rec("tenant/range", _time(lambda: tb.range(tstate, qt, jlo, jhi))
+        / Q * 1e6, t_detail)
+    rec("tenant/range+meta",
+        _time(lambda: tb.range(tstate, qt, jlo, jhi, tmeta)) / Q * 1e6,
+        t_detail)
+    for label, mesh, daxis, raxis in _tenant_meshes(T):
+        stb = ShardedTenantFilterBank(tb, mesh, daxis, raxis)
+        s_state = stb.shard_state(tstate)
+        s_meta = stb.shard_meta(tmeta)
+        mesh_detail = f"{t_detail},mesh={dict(mesh.shape)}"
+        rec(f"{label}/point",
+            _time(lambda: stb.point(s_state, qt, jq)) / Q * 1e6, mesh_detail)
+        rec(f"{label}/range+meta",
+            _time(lambda: stb.range(s_state, qt, jlo, jhi, s_meta))
+            / Q * 1e6, mesh_detail)
+
+    # -- meta-filter skip rate + implied memory-access saving --------------
+    cand, skip = tb.meta_skip_stats(tmeta, qt, jlo, jhi)
+    cand, skip = int(cand), int(skip)
+    skip_rate = skip / max(cand, 1)
+    main_wa = tb.bank.filter.word_accesses_per_range_query()
+    meta_wa = tb.meta.word_accesses_per_range_query()
+    eff_wa = meta_wa + (1.0 - skip_rate) * main_wa
+    rec("tenant/meta_skip_rate", 0.0,
+        f"skipped={skip};candidates={cand};rate={skip_rate:.4f}")
+    rec("tenant/meta_word_accesses", 0.0,
+        f"main={main_wa};meta={meta_wa};effective={eff_wa:.2f}")
+
+    if args.json:
+        payload = {
+            "schema": SCHEMA,
+            "config": {k: v for k, v in vars(args).items() if k != "json"},
+            "devices": len(jax.devices()),
+            "rows": [{"name": n, "us_per_query": float(u), "detail": str(d)}
+                     for n, u, d in rows],
+            "meta_filter": {
+                "candidates": cand, "skipped": skip,
+                "skip_rate": skip_rate,
+                "word_accesses_main": main_wa,
+                "word_accesses_meta": meta_wa,
+                "word_accesses_effective": eff_wa,
+            },
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
 
 
 if __name__ == "__main__":

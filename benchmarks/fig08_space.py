@@ -2,10 +2,11 @@
 and the theoretical lower bounds (Carter point / Goswami range)."""
 import numpy as np
 
+from repro.core.model import (basic_point_fpr, basic_space_for_fpr,
+                              point_lower_bound_space,
+                              range_lower_bound_space, rosetta_space_for_fpr)
+
 from .common import emit
-from repro.core.model import (basic_space_for_fpr, point_lower_bound_space,
-                              range_lower_bound_space, rosetta_space_for_fpr,
-                              basic_point_fpr)
 
 N = 10_000_000
 D = 64

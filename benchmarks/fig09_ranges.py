@@ -2,13 +2,16 @@
 distributions at a fixed 22 bits/key budget (the paper's favorable setting)."""
 import numpy as np
 
-from .common import emit, gen_empty_ranges, gen_keys, measure_range
 from repro.filters import (BloomRFAdapter, FencePointers, PrefixBloomFilter,
                            Rosetta, SuRFLite)
+
+from .common import emit, gen_empty_ranges, gen_keys, measure_range
 
 N = 200_000
 Q = 10_000
 BPK = 22.0
+DISTS = ("uniform", "normal", "zipf")
+RLOG2S = (2, 6, 10, 14, 18, 24, 30)
 
 
 def _filters(rlog2):
@@ -25,8 +28,8 @@ def run():
     rows = []
     rng = np.random.default_rng(9)
     keys = gen_keys(N, "uniform", rng)
-    for wdist in ("uniform", "normal", "zipf"):
-        for rlog2 in (2, 6, 10, 14, 18, 24, 30):
+    for wdist in DISTS:
+        for rlog2 in RLOG2S:
             lo, hi, truth = gen_empty_ranges(keys, Q, 2 ** rlog2, wdist, rng)
             for name, f in _filters(rlog2):
                 f.build(keys)

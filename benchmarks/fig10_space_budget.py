@@ -2,12 +2,14 @@
 large ranges, plus point-query FPR vs a standard Bloom filter."""
 import numpy as np
 
-from .common import emit, gen_empty_ranges, gen_keys, measure_point, \
-    measure_range
-from repro.filters import (BloomFilter, BloomRFAdapter, Rosetta, SuRFLite)
+from repro.filters import BloomFilter, BloomRFAdapter, Rosetta, SuRFLite
+
+from .common import (emit, gen_empty_ranges, gen_keys, measure_point,
+                     measure_range)
 
 N = 200_000
 Q = 10_000
+BPKS = (10, 14, 18, 22)
 
 
 def run():
@@ -15,7 +17,7 @@ def run():
     rng = np.random.default_rng(10)
     keys = gen_keys(N, "uniform", rng)
     classes = {"small": 6, "medium": 14, "large": 22}
-    for bpk in (10, 14, 18, 22):
+    for bpk in BPKS:
         for cls, rlog2 in classes.items():
             lo, hi, truth = gen_empty_ranges(keys, Q, 2 ** rlog2, "uniform",
                                              rng)

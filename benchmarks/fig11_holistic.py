@@ -2,20 +2,25 @@
 distribution) — which PRF wins each cell (and by how much)."""
 import numpy as np
 
-from .common import emit, gen_empty_ranges, gen_keys, measure_range
 from repro.filters import BloomRFAdapter, Rosetta, SuRFLite
 
+from .common import emit, gen_empty_ranges, gen_keys, measure_range
+
 Q = 4_000
+NS = (10_000, 100_000, 1_000_000)
+DISTS = ("uniform", "normal", "zipf")
+BPKS = (10, 16, 22)
+RLOG2S = (4, 10, 16)
 
 
 def run():
     rows = []
     rng = np.random.default_rng(11)
-    for n in (10_000, 100_000, 1_000_000):
-        for dist in ("uniform", "normal", "zipf"):
+    for n in NS:
+        for dist in DISTS:
             keys = gen_keys(n, dist, rng)
-            for bpk in (10, 16, 22):
-                for rlog2 in (4, 10, 16):
+            for bpk in BPKS:
+                for rlog2 in RLOG2S:
                     lo, hi, truth = gen_empty_ranges(keys, Q, 2 ** rlog2,
                                                      dist, rng)
                     results = {}

@@ -10,28 +10,29 @@ import io
 import time
 
 import numpy as np
-import jax.numpy as jnp
 
-from .common import emit, gen_empty_ranges, gen_keys, measure_point, \
-    measure_range
-from repro.core import BloomRF, basic_layout
 from repro.core.codecs import (float64_to_u64, multiattr_insert_codes,
                                multiattr_range_for_a_eq_b_range)
 from repro.filters import (BloomFilter, BloomRFAdapter, CuckooFilter,
                            Rosetta, SuRFLite)
 
+from .common import (emit, gen_empty_ranges, gen_keys, measure_point,
+                     measure_range)
+
 N = 200_000
 Q = 10_000
+MIX_OPS = 20_000   # insert/lookup ops per fig12a ratio setting
+LOOKUPS = 50_000
 
 
 def fig12a_online(rows, rng):
     keys = gen_keys(N, "uniform", rng)
     f = BloomRFAdapter(16, mode="basic")
     f.build(keys[:1000])  # warm start
-    lookups = gen_keys(50_000, "uniform", rng)
+    lookups = gen_keys(LOOKUPS, "uniform", rng)
     for ratio in (0.0, 0.25, 0.5, 0.75):
-        n_ins = int(20_000 * ratio)
-        n_look = 20_000 - n_ins
+        n_ins = int(MIX_OPS * ratio)
+        n_look = MIX_OPS - n_ins
         t0 = time.perf_counter()
         if n_ins:
             f.insert_more(keys[1000:1000 + n_ins])
@@ -39,7 +40,7 @@ def fig12a_online(rows, rng):
             f.point(lookups[:n_look])
         dt = time.perf_counter() - t0
         rows.append(emit(f"fig12a/insert_ratio={ratio}/bloomRF",
-                         dt / 20_000 * 1e6, f"{20_000 / dt:.0f} ops/s"))
+                         dt / MIX_OPS * 1e6, f"{MIX_OPS / dt:.0f} ops/s"))
 
 
 def fig12c_construction(rows, rng):

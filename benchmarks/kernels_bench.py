@@ -7,12 +7,13 @@ tests/test_kernels.py) and are benchmarked here only for dispatch overhead
 sanity."""
 import time
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BloomRF, basic_layout
 
 from .common import emit, gen_keys
-from repro.core import BloomRF, basic_layout
 
 N = 1_000_000
 Q = 200_000

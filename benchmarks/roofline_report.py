@@ -3,10 +3,11 @@ derive MODEL_FLOPS / usefulness ratios per cell (EXPERIMENTS.md §Roofline)."""
 import json
 import os
 
-from .common import emit
 from repro.configs import get_config
-from repro.models import get_model, SHAPES
+from repro.models import SHAPES, get_model
 from repro.models.params import count_params
+
+from .common import emit
 
 PEAK_FLOPS = 197e12
 

@@ -2,16 +2,44 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only fig09,fig12]
+           [--smoke] [--json PATH]
+
+``--smoke`` shrinks key/query counts and sweep grids to CI-friendly sizes;
+``--json`` writes every emitted row as machine-readable JSON (the CI
+``bench-smoke`` job uploads it as the ``BENCH_CI.json`` artifact and fails
+on malformed output).
 """
 import argparse
+import json
 import sys
 import time
+
+SCHEMA = "bloomrf-bench/v1"
+
+# Per-module constant overrides applied by --smoke.  Only attributes the
+# module actually defines are patched, so a rename fails loudly in CI
+# (the run falls back to full size and blows the job timeout) rather than
+# silently benchmarking the wrong thing.
+SMOKE = {
+    "fig08": {"N": 100_000},
+    "fig09": {"N": 20_000, "Q": 2_000, "DISTS": ("uniform",),
+              "RLOG2S": (2, 10)},
+    "fig10": {"N": 20_000, "Q": 2_000, "BPKS": (10, 18)},
+    "fig11": {"Q": 1_000, "NS": (10_000,), "DISTS": ("uniform",),
+              "BPKS": (16,), "RLOG2S": (10,)},
+    "fig12": {"N": 20_000, "Q": 2_000, "MIX_OPS": 4_000, "LOOKUPS": 10_000},
+    "kernels": {"N": 100_000, "Q": 50_000},
+}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated module name filter")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI / quick local sanity runs")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write emitted rows as JSON to PATH")
     args = ap.parse_args()
 
     from . import (fig08_space, fig09_ranges, fig10_space_budget,
@@ -25,13 +53,30 @@ def main() -> None:
     ]
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
+    rows = []
     t0 = time.time()
     for name, mod in modules:
         if only and name not in only:
             continue
+        if args.smoke:
+            for attr, val in SMOKE.get(name, {}).items():
+                if hasattr(mod, attr):
+                    setattr(mod, attr, val)
         print(f"# --- {name} ---", file=sys.stderr)
-        mod.run()
-    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+        rows.extend(mod.run() or [])
+    elapsed = time.time() - t0
+    print(f"# total {elapsed:.1f}s", file=sys.stderr)
+    if args.json:
+        payload = {
+            "schema": SCHEMA,
+            "smoke": args.smoke,
+            "only": sorted(only) if only else None,
+            "elapsed_s": elapsed,
+            "rows": [{"name": n, "us_per_call": float(u), "derived": str(d)}
+                     for n, u, d in rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
 
 
 if __name__ == "__main__":

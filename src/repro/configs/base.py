@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import importlib
 
-from ..models.config import ModelConfig, Shape, SHAPES
+from ..models.config import SHAPES, ModelConfig, Shape
 
 ARCH_NAMES = [
     "moonshot-v1-16b-a3b",

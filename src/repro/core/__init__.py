@@ -1,12 +1,13 @@
 """bloomRF core: the paper's contribution as a composable JAX module."""
-from .layout import FilterLayout, basic_layout, require_x64
 from .bloomrf import BloomRF
-from .hashing import key_dtype_for
+from .hashing import dyadic_prefixes, key_dtype_for
+from .layout import FilterLayout, basic_layout, require_x64
 
 __all__ = [
     "FilterLayout",
     "basic_layout",
     "require_x64",
     "BloomRF",
+    "dyadic_prefixes",
     "key_dtype_for",
 ]

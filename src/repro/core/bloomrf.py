@@ -136,8 +136,8 @@ class BloomRF:
 
         def body(j, st):
             for t in range(self._probes_per_key):
-                l = lane[j, t]
-                st = st.at[l].set(st[l] | mask[j, t])
+                ln = lane[j, t]
+                st = st.at[ln].set(st[ln] | mask[j, t])
             return st
 
         return jax.lax.fori_loop(0, keys.shape[0], body, state)
@@ -273,14 +273,14 @@ class BloomRF:
         lane_end = jnp.minimum(lane1, lane0 + lay.max_exact_scan_lanes - 1)
 
         def cond(c):
-            l, found = c
-            return jnp.logical_and(~found, l <= lane_end)
+            ln, found = c
+            return jnp.logical_and(~found, ln <= lane_end)
 
         def body(c):
-            l, found = c
-            m = _mask_u32(jnp.where(l == lane0, b0, 0),
-                          jnp.where(l == lane1, b1, 31))
-            return l + 1, found | ((state[l] & m) != 0)
+            ln, found = c
+            m = _mask_u32(jnp.where(ln == lane0, b0, 0),
+                          jnp.where(ln == lane1, b1, 31))
+            return ln + 1, found | ((state[ln] & m) != 0)
 
         _, any_hit = jax.lax.while_loop(cond, body, (lane0, jnp.asarray(False)))
         return nonempty & (over_cap | any_hit)

@@ -14,12 +14,13 @@ see repro.core.layout.require_x64).
 """
 from __future__ import annotations
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "splitmix64_np",
     "derive_seeds",
+    "dyadic_prefixes",
     "mix64",
     "mix32",
     "mix",
@@ -91,3 +92,19 @@ def key_dtype_for(d: int):
     if d <= 64:
         return jnp.uint64
     raise ValueError(f"domain bits must be <= 64, got {d}")
+
+
+def dyadic_prefixes(keys, level: int, d: int):
+    """Dyadic prefixes of ``keys`` at ``level``: the keys with their low
+    ``level`` bits dropped, living in the ``d - level``-bit prefix domain.
+
+    A key ``k`` is in ``[lo, hi]`` only if ``k >> level`` is in
+    ``[lo >> level, hi >> level]``, so a filter built over these prefixes
+    answers coarse range queries with no false negatives — the building
+    block for Bloofi-style meta-filters over shard summaries
+    (``dist/tenant_bank.py``).
+    """
+    if not (0 <= level < d):
+        raise ValueError(f"need 0 <= level < d, got level={level}, d={d}")
+    keys = jnp.asarray(keys, key_dtype_for(d))
+    return (keys >> level).astype(key_dtype_for(d - level))

@@ -27,7 +27,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import cached_property
-from typing import Optional, Sequence
+from typing import Optional
 
 import numpy as np
 

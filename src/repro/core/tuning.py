@@ -93,7 +93,7 @@ def advise(d: int, n: int, m_bits: int, R: float,
            seed: int = 0x0B100F11) -> AdvisorResult:
     """Select a bloomRF configuration for ranges up to ``R`` within ``m_bits``."""
     # exact level heuristic: smallest level whose bitmap is < 60% of budget
-    l_e = next(l for l in range(d + 1) if 2.0 ** (d - l) < 0.6 * m_bits)
+    l_e = next(lv for lv in range(d + 1) if 2.0 ** (d - lv) < 0.6 * m_bits)
     l_e = max(1, l_e)
     top_range_lv = min(int(math.ceil(math.log2(max(R, 2.0)))), d)
 

@@ -1,7 +1,7 @@
 """Data pipeline: synthetic corpus, online bloomRF dedup + shard range
 admission."""
-from .pipeline import (SyntheticCorpus, StreamDeduper, ShardRangeIndex,
-                       batch_iterator)
+from .pipeline import (ShardRangeIndex, StreamDeduper, SyntheticCorpus,
+                        batch_iterator)
 
 __all__ = ["SyntheticCorpus", "StreamDeduper", "ShardRangeIndex",
            "batch_iterator"]

@@ -7,13 +7,16 @@ Modules:
   compression  — int8 error-feedback gradient compression + Elias-Fano
                  encoding of sorted posting lists / filter-state snapshots
   filter_bank  — BloomRF filter bank range-partitioned across a device mesh
+  tenant_bank  — multi-tenant bank stack with Bloofi-style meta-filters and
+                 r-way read replication over a replica mesh axis
 """
-from .sharding import Shardings, batch_axes_for, make_shardings, mesh_axis_sizes
-from .pipeline import pipeline_apply
 from .compression import (ef_compress, ef_init, elias_fano_decode,
                           elias_fano_encode, elias_fano_size_bits,
                           pack_filter_state, unpack_filter_state)
 from .filter_bank import FilterBank, ShardedFilterBank
+from .pipeline import pipeline_apply
+from .sharding import Shardings, batch_axes_for, make_shardings, mesh_axis_sizes
+from .tenant_bank import ShardedTenantFilterBank, TenantFilterBank
 
 __all__ = [
     "Shardings", "batch_axes_for", "make_shardings", "mesh_axis_sizes",
@@ -22,4 +25,5 @@ __all__ = [
     "elias_fano_size_bits",
     "pack_filter_state", "unpack_filter_state",
     "FilterBank", "ShardedFilterBank",
+    "TenantFilterBank", "ShardedTenantFilterBank",
 ]

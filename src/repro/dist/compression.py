@@ -84,39 +84,40 @@ def elias_fano_encode(values, universe: Optional[int] = None) -> dict:
     if n == 0:  # decode never reads the buffers; don't size them by u
         return {"n": 0, "u": u, "l": 0, "low": np.zeros(0, np.uint8),
                 "high": np.zeros(0, np.uint8)}
-    l = _low_bits(u, n)
-    # low halves: n * l bits, packed little-endian-by-value
-    if l:
-        shifts = np.arange(l, dtype=np.uint64)
+    lbits = _low_bits(u, n)
+    # low halves: n * lbits bits, packed little-endian-by-value
+    if lbits:
+        shifts = np.arange(lbits, dtype=np.uint64)
         low_bits = ((v[:, None] >> shifts[None, :]) & np.uint64(1)
                     ).astype(np.uint8).reshape(-1)
         low = np.packbits(low_bits)
     else:
         low = np.zeros(0, np.uint8)
     # high halves: unary gaps -> bit i+high[i] set, i = 0..n-1
-    hi_len = n + (u >> l) + 1
+    hi_len = n + (u >> lbits) + 1
     hi_bits = np.zeros(hi_len, np.uint8)
     if n:
-        hi_bits[(v >> np.uint64(l)).astype(np.int64) + np.arange(n)] = 1
-    return {"n": n, "u": u, "l": l, "low": low, "high": np.packbits(hi_bits)}
+        hi_bits[(v >> np.uint64(lbits)).astype(np.int64) + np.arange(n)] = 1
+    return {"n": n, "u": u, "l": lbits, "low": low,
+            "high": np.packbits(hi_bits)}
 
 
 def elias_fano_decode(enc: dict) -> np.ndarray:
     """Inverse of :func:`elias_fano_encode`; returns the sorted uint64 list."""
-    n, u, l = enc["n"], enc["u"], enc["l"]
+    n, u, lbits = enc["n"], enc["u"], enc["l"]
     if n == 0:
         return np.zeros(0, np.uint64)
     hi_bits = np.unpackbits(enc["high"])
     ones = np.flatnonzero(hi_bits)[:n]
     high = (ones - np.arange(n)).astype(np.uint64)
-    if l:
-        low_bits = np.unpackbits(enc["low"])[: n * l].reshape(n, l)
-        shifts = np.arange(l, dtype=np.uint64)
+    if lbits:
+        low_bits = np.unpackbits(enc["low"])[: n * lbits].reshape(n, lbits)
+        shifts = np.arange(lbits, dtype=np.uint64)
         low = (low_bits.astype(np.uint64) << shifts[None, :]).sum(
             axis=1, dtype=np.uint64)
     else:
         low = np.zeros(n, np.uint64)
-    return (high << np.uint64(l)) | low
+    return (high << np.uint64(lbits)) | low
 
 
 def elias_fano_size_bits(enc: dict) -> int:

@@ -30,7 +30,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
 
@@ -85,13 +84,24 @@ class FilterBank:
     def _point_shard(self, state_row, s_idx, low, shard):
         return self.filter.point(state_row, low) & (shard == s_idx)
 
-    def _range_shard(self, state_row, s_idx, lo_low, lo_shard, hi_low,
-                     hi_shard):
-        """Clip the global range to shard ``s_idx`` and probe the remainder."""
+    def _clip_to_shard(self, s_idx, lo_low, lo_shard, hi_low, hi_shard):
+        """Clip a routed global range to shard ``s_idx``.
+
+        Returns ``(nonempty, llo, lhi)``: whether the intersection with the
+        shard's dyadic interval is non-empty, and the clipped local bounds.
+        Single source of truth for the clip invariant — the tenant bank's
+        meta-filter path and skip-rate accounting reuse it."""
         top = jnp.asarray((1 << self.d_local) - 1, self.filter.kdtype)
         nonempty = (s_idx >= lo_shard) & (s_idx <= hi_shard)
         llo = jnp.where(lo_shard == s_idx, lo_low, jnp.zeros_like(lo_low))
         lhi = jnp.where(hi_shard == s_idx, hi_low, top)
+        return nonempty, llo, lhi
+
+    def _range_shard(self, state_row, s_idx, lo_low, lo_shard, hi_low,
+                     hi_shard):
+        """Clip the global range to shard ``s_idx`` and probe the remainder."""
+        nonempty, llo, lhi = self._clip_to_shard(s_idx, lo_low, lo_shard,
+                                                 hi_low, hi_shard)
         return self.filter.range(state_row, llo, lhi) & nonempty
 
     # -- single-device reference API -------------------------------------

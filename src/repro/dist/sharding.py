@@ -52,7 +52,8 @@ def _axes_size(mesh_shape: dict, axes) -> int:
 def _sanitize(mesh: Mesh, specs, sds_tree):
     """Replicate every spec entry whose axes do not divide the dim exactly."""
     msz = mesh_axis_sizes(mesh)
-    is_ps = lambda x: isinstance(x, PS)
+    def is_ps(x):
+        return isinstance(x, PS)
 
     def fix(ps: PS, s) -> PS:
         entries = tuple(ps) + (None,) * (len(s.shape) - len(tuple(ps)))

@@ -6,12 +6,12 @@ adapted to the same API by :class:`BloomRFAdapter`.
 """
 from .api import PointRangeFilter
 from .bloom import BloomFilter
-from .prefix_bloom import PrefixBloomFilter
+from .bloomrf_adapter import BloomRFAdapter
+from .cuckoo import CuckooFilter
 from .minmax import FencePointers
+from .prefix_bloom import PrefixBloomFilter
 from .rosetta import Rosetta
 from .surf_lite import SuRFLite
-from .cuckoo import CuckooFilter
-from .bloomrf_adapter import BloomRFAdapter
 
 __all__ = [
     "PointRangeFilter",

@@ -1,11 +1,10 @@
 """bloomRF adapted to the common host-side filter API used by benchmarks."""
 from __future__ import annotations
 
-import math
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core import BloomRF, basic_layout
 from ..core.tuning import advise

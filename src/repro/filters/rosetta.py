@@ -111,9 +111,9 @@ class Rosetta:
             if overflow:
                 out[q] = True
                 continue
-            for (l, p) in items:
+            for (lv, p) in items:
                 qid.append(q)
-                lvl.append(l)
+                lvl.append(lv)
                 pref.append(p)
         qid = np.asarray(qid, np.int64)
         lvl = np.asarray(lvl, np.int64)

@@ -56,9 +56,9 @@ class SuRFLite:
         left = np.full(self.n, 0, np.int64)
         right = np.full(self.n, 0, np.int64)
         if self.n > 1:
-            l = lcp(ks[1:], ks[:-1])
-            left[1:] = l
-            right[:-1] = l
+            lc = lcp(ks[1:], ks[:-1])
+            left[1:] = lc
+            right[:-1] = lc
         plen = np.minimum(np.maximum(left, right) + 1, 64)
         if self.mode == "real":
             plen = np.minimum(plen + self.suffix_bits, 64)

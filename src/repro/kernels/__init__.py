@@ -4,9 +4,9 @@ Each kernel has a pure-jnp oracle in ``ref.py``; ``ops.py`` is the jit'd
 dispatch wrapper.  Kernels are validated in interpret mode on CPU and target
 TPU VMEM tiling (see DESIGN.md §3 for the hardware adaptation).
 """
-from .ops import FilterOps
-from .probe import point_probe_resident, point_probe_partitioned
 from .insert import insert_resident
+from .ops import FilterOps
+from .probe import point_probe_partitioned, point_probe_resident
 from .rangeprobe import range_probe_resident
 
 __all__ = [

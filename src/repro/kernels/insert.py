@@ -39,9 +39,9 @@ def _insert_kernel(keys_ref, state_in_ref, state_ref, *, filt: BloomRF,
 
     def body(j, _):
         valid = (t * tile + j // P) < B
-        l = jnp.where(valid, lane[j // P, j % P], 0)
+        ln = jnp.where(valid, lane[j // P, j % P], 0)
         m = jnp.where(valid, mask[j // P, j % P], jnp.uint32(0))
-        state_ref[l] = state_ref[l] | m
+        state_ref[ln] = state_ref[ln] | m
         return 0
 
     jax.lax.fori_loop(0, tile * P, body, 0)

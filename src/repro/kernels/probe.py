@@ -21,7 +21,6 @@ kernels add memory orchestration, not new math.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -36,7 +36,7 @@ from ..configs import ARCH_NAMES, get_config, shape_applicable
 from ..dist.sharding import (batch_axes_for, make_shardings,
                              mesh_axis_sizes)
 from ..models import SHAPES, get_model
-from ..models.act import activation_mesh, unrolled_scans
+from ..models.act import activation_mesh
 from ..train.optimizer import OptConfig, adamw_update
 from .hlo_cost import analyze_hlo
 from .mesh import make_production_mesh

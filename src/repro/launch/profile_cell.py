@@ -16,8 +16,8 @@ from ..dist.sharding import batch_axes_for
 from ..models import SHAPES, get_model
 from ..models.act import activation_mesh
 from . import dryrun as dr
-from .hlo_cost import (_COLLECTIVES, _ELEMENTWISE, _FREE, _SLICELIKE, _attr,
-                       _parse_module, _shape_numel_bytes, _trip_count)
+from .hlo_cost import (_FREE, _attr, _parse_module, _shape_numel_bytes,
+                       _trip_count)
 from .mesh import make_production_mesh
 
 

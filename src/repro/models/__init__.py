@@ -1,5 +1,5 @@
 """Model zoo: dense / MoE / SSM / hybrid / enc-dec / VLM backbones."""
-from .config import ModelConfig, Shape, SHAPES
-from .registry import get_model, MODEL_FAMILIES
+from .config import SHAPES, ModelConfig, Shape
+from .registry import MODEL_FAMILIES, get_model
 
 __all__ = ["ModelConfig", "Shape", "SHAPES", "get_model", "MODEL_FAMILIES"]

@@ -21,8 +21,8 @@ from jax.sharding import PartitionSpec as PS
 from .act import scan as _act_scan
 from .act import constrain
 from .config import ModelConfig, Shape
-from .layers import KVCache, cast, flash_attention, gelu_mlp
-from .params import P, init_params, pspecs
+from .layers import cast, flash_attention, gelu_mlp
+from .params import P
 from .transformer import DenseModel, cross_entropy, stack_layers
 
 __all__ = ["EncDecModel"]

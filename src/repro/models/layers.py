@@ -115,8 +115,8 @@ def rope(x, positions, theta: float):
 # ---------------------------------------------------------------------------
 
 def _flash_scan(q, k, v, causal: bool, q_offset, kv_len, block: int):
-    """Forward online-softmax scan. Returns (out, m, l) with out already
-    normalized; m/l are the per-query statistics needed by the custom
+    """Forward online-softmax scan. Returns (out, m, lse) with out already
+    normalized; m/lse are the per-query statistics needed by the custom
     backward."""
     B, Sq, Hkv, G, hd = q.shape
     Skv = k.shape[1]
@@ -133,7 +133,7 @@ def _flash_scan(q, k, v, causal: bool, q_offset, kv_len, block: int):
     vb = v.reshape(B, nblk, blk, Hkv, hd).transpose(1, 0, 2, 3, 4)
 
     def step(carry, inp):
-        m, l, acc = carry
+        m, lse, acc = carry
         bi, kblk, vblk = inp
         k_pos = bi * blk + jnp.arange(blk)
         s = jnp.einsum("bqhgd,bkhd->bhgqk", q, kblk,
@@ -146,7 +146,7 @@ def _flash_scan(q, k, v, causal: bool, q_offset, kv_len, block: int):
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
-        l_new = l * corr + p.sum(axis=-1)
+        l_new = lse * corr + p.sum(axis=-1)
         pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
                         preferred_element_type=jnp.float32)
         acc_new = acc * corr[..., None] + pv
@@ -155,11 +155,11 @@ def _flash_scan(q, k, v, causal: bool, q_offset, kv_len, block: int):
     m0 = jnp.full((B, Hkv, G, Sq), -jnp.inf, jnp.float32)
     l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
     a0 = jnp.zeros((B, Hkv, G, Sq, hd), jnp.float32)
-    (m, l, acc), _ = _act_scan(
+    (m, lse, acc), _ = _act_scan(
         step, (m0, l0, a0), (jnp.arange(nblk), kb, vb))
-    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = acc / jnp.maximum(lse[..., None], 1e-30)
     out = out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B,Sq,Hkv,G,hd)
-    return out, m, jnp.maximum(l, 1e-30)
+    return out, m, jnp.maximum(lse, 1e-30)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
@@ -169,8 +169,8 @@ def _flash_custom(q, k, v, causal: bool, q_offset: int, block: int):
 
 
 def _flash_custom_fwd(q, k, v, causal, q_offset, block):
-    out, m, l = _flash_scan(q, k, v, causal, q_offset, None, block)
-    return out, (q, k, v, out, m, l)
+    out, m, lse = _flash_scan(q, k, v, causal, q_offset, None, block)
+    return out, (q, k, v, out, m, lse)
 
 
 def _flash_custom_bwd(causal, q_offset, block, res, dout):
@@ -178,7 +178,7 @@ def _flash_custom_bwd(causal, q_offset, block, res, dout):
     saving the per-block f32 (nblk, ...) statistics stacks jax autodiff
     creates for the forward scan (§Perf iteration 3) — residuals are just
     (q, k, v, out) plus the (B,Hkv,G,Sq) f32 softmax stats."""
-    q, k, v, out, m, l = res
+    q, k, v, out, m, lse = res
     B, Sq, Hkv, G, hd = q.shape
     Skv = k.shape[1]
     blk = min(block, Skv)
@@ -206,7 +206,7 @@ def _flash_custom_bwd(causal, q_offset, block, res, dout):
             mask &= q_pos[:, None] >= k_pos[None, :]
         mask &= k_pos[None, :] < Skv
         s = jnp.where(mask[None, None, None], s, -jnp.inf)
-        p = (jnp.exp(s - m[..., None]) / l[..., None]).astype(q.dtype)
+        p = (jnp.exp(s - m[..., None]) / lse[..., None]).astype(q.dtype)
         dv_blk = jnp.einsum("bhgqk,bhgqd->bkhd", p, do.astype(q.dtype))
         dp = jnp.einsum("bhgqd,bkhd->bhgqk", do.astype(q.dtype), vblk)
         ds = (p * (dp - delta[..., None].astype(q.dtype)) *

@@ -19,7 +19,7 @@ from .act import scan as _act_scan
 from .config import ModelConfig, Shape
 from .layers import rmsnorm
 from .params import P
-from .transformer import DenseModel, stack_layers
+from .transformer import DenseModel
 
 __all__ = ["MambaModel", "mamba_block_table", "mamba_block", "mamba_block_decode",
            "MambaCache", "init_mamba_cache_specs"]

@@ -16,9 +16,9 @@ from jax.sharding import PartitionSpec as PS
 
 from .act import constrain, current_mesh
 from .config import ModelConfig
-from .layers import attention, decode_attention, rmsnorm, swiglu, KVCache
+from .layers import attention, decode_attention, rmsnorm, swiglu
 from .params import P
-from .transformer import DenseModel, attn_table, mlp_table
+from .transformer import DenseModel, attn_table
 
 __all__ = ["MoEModel"]
 

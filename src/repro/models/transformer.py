@@ -13,9 +13,6 @@ API (shared by all families, see registry.py):
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PS

@@ -1,6 +1,6 @@
 """Serving substrate: paged KV cache, batched decode, bloomRF prefix index."""
+from .decode import ServeLoop
 from .kv_cache import PagedKVCache
 from .prefix_cache import PrefixCacheIndex
-from .decode import ServeLoop
 
 __all__ = ["PagedKVCache", "PrefixCacheIndex", "ServeLoop"]

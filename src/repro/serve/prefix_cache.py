@@ -1,34 +1,44 @@
 """bloomRF-indexed prefix-KV-cache admission (the paper's LSM integration,
-re-targeted at serving).
+re-targeted at serving), backed by the multi-tenant filter bank.
 
 Frozen cache *segments* are the analogue of SST files: immutable maps from
 ``(session, chunk_position)`` keys to lists of KV page ids.  Each segment
-carries a bloomRF built over its keys, so a batched lookup consults cheap
-filters before touching any segment's (potentially cold) map:
+carries a :class:`~repro.dist.tenant_bank.TenantFilterBank` where every
+**session namespace is a tenant**: the low ``log2(n_tenants)`` bits of the
+session id pick the tenant row, and the remaining session bits with the
+chunk position form the tenant-local key ``(session >> nt) << 16 | chunk``.
+A batched lookup consults the cheap per-tenant filters before touching any
+segment's (potentially cold) map:
 
 * point query  — "is this exact (session, chunk) prefix cached?"
 * range query  — "does this segment hold ANY chunk for session s?"
-  (key space is session<<B | chunk, so a session's chunks are one range),
-  and "any activity in a session-id window?" for range-based eviction sweeps.
+  (a session's chunks are one contiguous tenant-local range), and "any
+  activity in a session-id window?" for range-based eviction sweeps — the
+  window decomposes into one contiguous local range per tenant because
+  sessions are striped over tenants by their low bits.
 
-Keys are packed into a 32-bit domain (16-bit session, 16-bit chunk) so the
-filter runs without the x64 flag in serving processes; the 64-bit layout is a
-constructor switch.  Filters never produce false negatives -> no cached
-prefix is ever missed; a false positive costs one extra map probe (counted
-in stats).
+Segments also keep the bank's Bloofi-style meta-filter (built over the
+session-prefix level, i.e. chunk bits dropped), so sweep-style range probes
+are answered against ``main & meta`` — strictly fewer false positives.
+
+Keys stay in a 32-bit domain (16-bit session, 16-bit chunk) so the filters
+run without the x64 flag in serving processes.  Filters never produce false
+negatives -> no cached prefix is ever missed; a false positive costs one
+extra map probe (counted in stats).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import BloomRF, basic_layout
+from ..dist.tenant_bank import TenantFilterBank
 
 __all__ = ["PrefixCacheIndex", "pack_key"]
 
 _CHUNK_BITS = 16
+_SES_BITS = 16
 
 
 def pack_key(session: int, chunk: int) -> int:
@@ -36,35 +46,73 @@ def pack_key(session: int, chunk: int) -> int:
 
 
 class _Segment:
-    def __init__(self, entries: Dict[int, List[int]], bits_per_key: float):
+    def __init__(self, entries: Dict[int, List[int]], bank: TenantFilterBank,
+                 tenants: np.ndarray, local_keys: np.ndarray):
         self.entries = entries
-        n = max(len(entries), 1)
-        self.layout = basic_layout(32, n, bits_per_key, delta=6)
-        self.filter = BloomRF(self.layout)
-        keys = jnp.asarray(list(entries) or [0], jnp.uint32)
-        self.state = self.filter.build(keys)
+        self.bank = bank
+        self.state, self.meta = bank.build(jnp.asarray(tenants),
+                                           jnp.asarray(local_keys))
 
 
 class PrefixCacheIndex:
-    def __init__(self, bits_per_key: float = 14.0):
+    def __init__(self, bits_per_key: float = 14.0, n_tenants: int = 16):
+        if n_tenants < 1 or n_tenants & (n_tenants - 1):
+            raise ValueError(
+                f"n_tenants must be a power of two, got {n_tenants}")
+        if n_tenants > (1 << (_SES_BITS - 1)):
+            # at least one session bit must remain for the tenant-local key
+            # (the meta-filter level sits at the chunk/session boundary)
+            raise ValueError(f"at most {1 << (_SES_BITS - 1)} tenants")
         self.bits_per_key = bits_per_key
+        self.n_tenants = n_tenants
+        self.nt_bits = n_tenants.bit_length() - 1
+        self.d_seg = (_SES_BITS - self.nt_bits) + _CHUNK_BITS
         self.segments: List[_Segment] = []
+        self._banks: Dict[int, TenantFilterBank] = {}
         self.stats = {"filter_probes": 0, "filter_hits": 0,
-                      "map_probes": 0, "map_hits": 0}
+                      "map_probes": 0, "map_hits": 0, "range_probes": 0}
+
+    # -- session-namespace routing (scalar ints and numpy arrays alike) --
+    def _tenant(self, session):
+        return session & (self.n_tenants - 1)
+
+    def _local_key(self, session, chunk):
+        local_ses = (session & 0xFFFF) >> self.nt_bits
+        return (local_ses << _CHUNK_BITS) | (chunk & 0xFFFF)
+
+    def _bank_for(self, n_entries: int) -> TenantFilterBank:
+        """Banks are cached per capacity class (power of two) so segments of
+        similar size share one compiled filter program."""
+        cap = max(16, 1 << (max(n_entries, 1) - 1).bit_length())
+        if cap not in self._banks:
+            self._banks[cap] = TenantFilterBank(
+                self.d_seg, self.n_tenants, 1,
+                n_keys_per_tenant=max(cap // self.n_tenants, 1),
+                bits_per_key=self.bits_per_key, delta=6,
+                meta_level=_CHUNK_BITS)
+        return self._banks[cap]
 
     # ------------------------------------------------------------------
     def freeze_segment(self, entries: Dict[int, List[int]]) -> int:
         """Freeze a batch of (packed key -> page list) into a new segment."""
-        self.segments.append(_Segment(dict(entries), self.bits_per_key))
+        entries = dict(entries)
+        packed = list(entries) or [pack_key(0, 0)]
+        sessions = np.asarray([k >> _CHUNK_BITS for k in packed], np.uint32)
+        chunks = np.asarray([k & 0xFFFF for k in packed], np.uint32)
+        tenants = self._tenant(sessions).astype(np.uint32)
+        local = self._local_key(sessions, chunks).astype(np.uint32)
+        self.segments.append(_Segment(entries, self._bank_for(len(packed)),
+                                      tenants, local))
         return len(self.segments) - 1
 
     def lookup(self, session: int, chunk: int) -> Optional[List[int]]:
-        """Newest-first point lookup through the segment filters."""
+        """Newest-first point lookup through the per-tenant filters."""
         key = pack_key(session, chunk)
-        kq = jnp.uint32(key)
+        t = jnp.asarray([self._tenant(session)], jnp.uint32)
+        q = jnp.asarray([self._local_key(session, chunk)], jnp.uint32)
         for seg in reversed(self.segments):
             self.stats["filter_probes"] += 1
-            if bool(seg.filter.point(seg.state, kq)):
+            if bool(seg.bank.point(seg.state, t, q)[0]):
                 self.stats["filter_hits"] += 1
                 self.stats["map_probes"] += 1
                 if key in seg.entries:
@@ -74,21 +122,54 @@ class PrefixCacheIndex:
 
     def session_segments(self, session: int) -> List[int]:
         """Range query: segments possibly holding ANY chunk of ``session``."""
-        lo = jnp.uint32(pack_key(session, 0))
-        hi = jnp.uint32(pack_key(session, (1 << _CHUNK_BITS) - 1))
+        t = jnp.asarray([self._tenant(session)], jnp.uint32)
+        lo = jnp.asarray([self._local_key(session, 0)], jnp.uint32)
+        hi = jnp.asarray([self._local_key(session, (1 << _CHUNK_BITS) - 1)],
+                         jnp.uint32)
         out = []
         for i, seg in enumerate(self.segments):
             self.stats["filter_probes"] += 1
-            if bool(seg.filter.range(seg.state, lo, hi)):
+            self.stats["range_probes"] += 1
+            if bool(seg.bank.range(seg.state, t, lo, hi, seg.meta)[0]):
                 out.append(i)
         return out
 
+    def _window_probes(self, lo_session: int,
+                       hi_session: int) -> Tuple[np.ndarray, ...]:
+        """Decompose a session-id window into per-tenant local key ranges.
+
+        Sessions stripe over tenants by their low bits, so the sessions of
+        tenant ``t`` inside ``[lo_session, hi_session]`` are one contiguous
+        local-session interval; each becomes one (tenant, lo, hi) probe."""
+        T = self.n_tenants
+        ts, los, his = [], [], []
+        for t in range(T):
+            lo_loc = (max(lo_session - t, 0) + T - 1) // T
+            if hi_session < t:
+                continue
+            hi_loc = (hi_session - t) // T
+            if hi_loc < lo_loc:
+                continue
+            ts.append(t)
+            los.append(lo_loc << _CHUNK_BITS)
+            his.append((hi_loc << _CHUNK_BITS) | ((1 << _CHUNK_BITS) - 1))
+        return (np.asarray(ts, np.uint32), np.asarray(los, np.uint32),
+                np.asarray(his, np.uint32))
+
     def eviction_candidates(self, lo_session: int, hi_session: int) -> List[int]:
         """Range sweep over a session-id window (e.g. expired id range)."""
-        lo = jnp.uint32(pack_key(lo_session, 0))
-        hi = jnp.uint32(pack_key(hi_session, (1 << _CHUNK_BITS) - 1))
-        return [i for i, seg in enumerate(self.segments)
-                if bool(seg.filter.range(seg.state, lo, hi))]
+        ts, los, his = self._window_probes(lo_session, hi_session)
+        if not len(ts):
+            return []
+        t, lo, hi = jnp.asarray(ts), jnp.asarray(los), jnp.asarray(his)
+        out = []
+        for i, seg in enumerate(self.segments):
+            self.stats["filter_probes"] += 1
+            self.stats["range_probes"] += 1
+            if bool(np.asarray(
+                    seg.bank.range(seg.state, t, lo, hi, seg.meta)).any()):
+                out.append(i)
+        return out
 
     def false_positive_rate(self) -> float:
         fp = self.stats["map_probes"] - self.stats["map_hits"]

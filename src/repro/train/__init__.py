@@ -1,6 +1,6 @@
 """Training substrate: optimizer, train step, checkpointing, fault tolerance."""
-from .optimizer import adamw_init, adamw_update, cosine_lr, OptConfig
-from .train_loop import make_train_step, Trainer, TrainConfig
+from .optimizer import OptConfig, adamw_init, adamw_update, cosine_lr
+from .train_loop import TrainConfig, Trainer, make_train_step
 
 __all__ = ["adamw_init", "adamw_update", "cosine_lr", "OptConfig",
            "make_train_step", "Trainer", "TrainConfig"]

@@ -79,7 +79,7 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, n_shards: int = 4) -> str:
                 if hi > lo:
                     shard_files[s][k] = arr[lo:hi]
                     shard_keys[s].extend(
-                        (ordinal << 7) | int(l) for l in range(lo, hi))
+                        (ordinal << 7) | int(ly) for ly in range(lo, hi))
         else:
             shard_files[0][k] = arr
             shard_keys[0].append(ordinal << 7)  # layer 0 pseudo-key

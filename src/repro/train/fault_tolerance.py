@@ -14,7 +14,7 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, List, Optional
+from typing import Callable, List
 
 import jax
 

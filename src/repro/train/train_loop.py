@@ -12,10 +12,8 @@ async checkpointing, straggler detection hooks and crash/restart recovery
 from __future__ import annotations
 
 import dataclasses
-import json
-import os
 import time
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,8 +1,8 @@
 """Core bloomRF correctness: the no-false-negative invariant (exhaustive on
 small domains, randomized on 64-bit), FPR agreement with the paper's model,
 and the paper's §7 worked example."""
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from conftest import brute_force_range_truth

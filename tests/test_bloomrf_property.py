@@ -1,6 +1,6 @@
 """Hypothesis property tests on bloomRF's invariants."""
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 hypothesis = pytest.importorskip(
@@ -9,9 +9,8 @@ hypothesis = pytest.importorskip(
 from hypothesis import given, settings, strategies as st
 
 from repro.core import BloomRF, basic_layout
-from repro.core.codecs import (float64_to_u64, u64_to_float64,
-                               string_point_code, string_range_bounds,
-                               pack2x32)
+from repro.core.codecs import (float64_to_u64, pack2x32, string_point_code,
+                               string_range_bounds, u64_to_float64)
 
 _settings = settings(max_examples=40, deadline=None)
 

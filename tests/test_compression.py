@@ -1,7 +1,7 @@
 """Elias-Fano posting lists and filter-state snapshots (dist/compression.py).
 The int8 error-feedback path is covered by tests/test_train.py."""
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.core import BloomRF, basic_layout

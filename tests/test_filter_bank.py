@@ -1,9 +1,9 @@
 """Sharded filter bank: shard-vs-single-device equivalence, false-negative
 freedom under sharding, cross-shard range routing.  Multi-device checks run
 as subprocesses (device count must be fixed before jax initializes)."""
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from conftest import brute_force_range_truth

@@ -1,7 +1,7 @@
 """Pallas kernels vs pure-jnp oracles (interpret mode): bit-identical
 results across layout/shape/dtype sweeps."""
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.core import BloomRF, FilterLayout, basic_layout

@@ -2,9 +2,9 @@
 grads), prefill/decode consistency, and KV-cache head padding."""
 import dataclasses
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.configs import ARCH_NAMES, get_config

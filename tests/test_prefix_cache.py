@@ -1,0 +1,82 @@
+"""Prefix-cache index on the tenant bank: session-namespace routing,
+range-based eviction sweeps, and the false-positive stats counters."""
+from repro.serve.prefix_cache import PrefixCacheIndex, pack_key
+
+
+def _freeze_sessions(idx, sessions, chunks=range(4)):
+    return idx.freeze_segment({pack_key(s, c): [s * 100 + c]
+                               for s in sessions for c in chunks})
+
+
+def test_namespace_routing_no_collisions():
+    """Sessions sharing a tenant (same low bits) stay distinguishable."""
+    idx = PrefixCacheIndex(bits_per_key=16, n_tenants=8)
+    _freeze_sessions(idx, [1, 9, 17])  # all tenant 1 under 8 tenants
+    for s in (1, 9, 17):
+        for c in range(4):
+            assert idx.lookup(s, c) == [s * 100 + c]
+    assert idx.lookup(25, 0) is None  # tenant 1, never inserted
+    assert idx.lookup(2, 0) is None   # different tenant, never inserted
+
+
+def test_eviction_sweep_windows():
+    idx = PrefixCacheIndex(bits_per_key=16, n_tenants=8)
+    s0 = _freeze_sessions(idx, range(10, 20))
+    s1 = _freeze_sessions(idx, range(100, 120))
+    # windows overlapping exactly one segment must report it (no FN)
+    assert s0 in idx.eviction_candidates(0, 50)
+    assert s1 in idx.eviction_candidates(90, 130)
+    # a window covering everything reports both
+    both = idx.eviction_candidates(0, 200)
+    assert s0 in both and s1 in both
+    # empty window decomposes to no probes at all
+    assert idx.eviction_candidates(60, 50) == []
+
+
+def test_eviction_sweep_window_decomposition():
+    """The per-tenant window decomposition covers exactly the sessions in
+    [lo, hi]: every covered session id appears in exactly one tenant's
+    contiguous local range."""
+    idx = PrefixCacheIndex(n_tenants=8)
+    lo_s, hi_s = 13, 61
+    ts, los, his = idx._window_probes(lo_s, hi_s)
+    covered = set()
+    for t, lo, hi in zip(ts.tolist(), los.tolist(), his.tolist()):
+        for local_ses in range(lo >> 16, (hi >> 16) + 1):
+            ses = (local_ses << idx.nt_bits) | t
+            assert ses not in covered, "session covered twice"
+            covered.add(ses)
+    assert covered == set(range(lo_s, hi_s + 1))
+
+
+def test_session_segments_across_segments():
+    idx = PrefixCacheIndex(bits_per_key=16, n_tenants=8)
+    a = idx.freeze_segment({pack_key(5, 0): [1], pack_key(5, 1): [2]})
+    b = idx.freeze_segment({pack_key(5, 2): [3], pack_key(6, 0): [4]})
+    segs = idx.session_segments(5)
+    assert a in segs and b in segs
+
+
+def test_fp_stats_counters():
+    idx = PrefixCacheIndex(bits_per_key=16, n_tenants=8)
+    _freeze_sessions(idx, [1, 2, 3])
+    # hits: filter and map agree
+    assert idx.lookup(2, 1) == [201]
+    st = idx.stats
+    assert st["filter_probes"] == 1 and st["filter_hits"] == 1
+    assert st["map_probes"] == 1 and st["map_hits"] == 1
+    assert idx.false_positive_rate() == 0.0
+    # misses never outnumber probes, and the fpr formula holds
+    for s in range(40, 80):
+        assert idx.lookup(s, 0) is None
+    st = idx.stats
+    assert st["filter_probes"] == 41
+    assert st["map_hits"] == 1
+    fp = st["map_probes"] - st["map_hits"]
+    assert fp >= 0
+    assert idx.false_positive_rate() == fp / max(st["filter_hits"], 1)
+    # range sweeps tick their own counter
+    before = st["range_probes"]
+    idx.session_segments(1)
+    idx.eviction_candidates(0, 10)
+    assert idx.stats["range_probes"] == before + 2

@@ -1,15 +1,15 @@
 """Serving substrate + data pipeline tests."""
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
+from repro.data import (ShardRangeIndex, StreamDeduper, SyntheticCorpus,
+                        batch_iterator)
 from repro.models import get_model
 from repro.serve import PagedKVCache, PrefixCacheIndex, ServeLoop
 from repro.serve.decode import Request
 from repro.serve.prefix_cache import pack_key
-from repro.data import (ShardRangeIndex, StreamDeduper, SyntheticCorpus,
-                        batch_iterator)
 
 
 def test_serve_loop_matches_manual_greedy(rng):

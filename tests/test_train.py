@@ -2,18 +2,17 @@
 fault tolerance, gradient compression, straggler detection."""
 import itertools
 
-import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
+import numpy as np
 
 from repro.configs import get_config
+from repro.dist.compression import ef_compress, ef_init
 from repro.models import get_model
 from repro.train import OptConfig, TrainConfig, Trainer, make_train_step
 from repro.train.checkpoint import (latest_step, restore_checkpoint,
                                     restore_layer_range, save_checkpoint)
 from repro.train.fault_tolerance import Supervisor, elastic_restore
-from repro.dist.compression import ef_compress, ef_init
 
 
 def _fixed_batch(cfg, rng, B=4, S=32):
