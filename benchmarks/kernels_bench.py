@@ -20,8 +20,8 @@ Q = 200_000
 
 
 def _time(fn, *args, reps=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    # warm up exactly once (block_until_ready handles tuples/pytrees)
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(fn(*args))

@@ -1,5 +1,6 @@
 """bloomRF core: the paper's contribution as a composable JAX module."""
 from .bloomrf import BloomRF
+from .engine import PointPlan, ProbeEngine, RangePlan
 from .hashing import dyadic_prefixes, key_dtype_for
 from .layout import FilterLayout, basic_layout, require_x64
 
@@ -8,6 +9,9 @@ __all__ = [
     "basic_layout",
     "require_x64",
     "BloomRF",
+    "ProbeEngine",
+    "RangePlan",
+    "PointPlan",
     "dyadic_prefixes",
     "key_dtype_for",
 ]

@@ -13,6 +13,11 @@ Design notes (see DESIGN.md §5):
 * Insert / point / range are pure functions of ``(state, keys)`` and are
   jit/vmap-compatible.  64-bit domains require the x64 flag (see
   ``layout.require_x64``).
+* ``point``/``range`` route through the plan->gather->combine probe engine
+  (``core/engine.py``, DESIGN.md §9): one fused ``state[lanes]`` gather per
+  batch, covering-bit loads deduped against child-word loads.  The scalar
+  pre-engine path survives as ``point_reference``/``range_reference`` — the
+  bit-identity oracle for the engine and the Pallas kernels.
 
 False-negative freedom: insert and every probe share the single pair of
 position functions ``_load_word`` / ``_bit_probe``; property tests exercise
@@ -61,6 +66,18 @@ class BloomRF:
         # trace-time constant tables
         self._seeds = layout.seeds  # np.uint64 (k, rmax)
         self._probes_per_key = sum(layout.replicas) + (1 if layout.has_exact else 0)
+        self._engine = None
+
+    @property
+    def engine(self):
+        """The plan->gather->combine probe engine (core/engine.py), lazily
+        built; ``point``/``range`` route through it.  The legacy scalar path
+        stays available as ``point_reference``/``range_reference``."""
+        if self._engine is None:
+            from .engine import ProbeEngine
+
+            self._engine = ProbeEngine(self)
+        return self._engine
 
     # -- helpers ---------------------------------------------------------
     def _kd(self, v):
@@ -105,23 +122,50 @@ class BloomRF:
     # insertion
     # ------------------------------------------------------------------
     def scatter_or(self, state: jax.Array, pos: jax.Array,
-                   vals: Optional[jax.Array] = None) -> jax.Array:
-        """OR bit positions into the packed state via a transient
-        bit-expanded buffer.  ``vals`` (optional, same shape as ``pos``)
-        masks which positions take effect — the sharded filter bank uses it
-        to drop keys owned by other shards while keeping this lane-packing
-        convention in one place."""
-        temp = jnp.zeros(self.layout.total_bits, jnp.bool_)
-        temp = (temp.at[pos].set(True) if vals is None
-                else temp.at[pos].max(vals))
-        lanes = temp.reshape(-1, 32).astype(jnp.uint32)
-        packed = jnp.sum(lanes << jnp.arange(32, dtype=jnp.uint32)[None, :],
-                         axis=1, dtype=jnp.uint32)
-        return state | packed
+                   vals: Optional[jax.Array] = None,
+                   bitmap: bool = False) -> jax.Array:
+        """OR bit positions into the packed state.  ``vals`` (optional, same
+        shape as ``pos``) masks which positions take effect — the sharded
+        filter bank uses it to drop keys owned by other shards while keeping
+        this lane-packing convention in one place.
+
+        Default path: lane-packed scatter-add.  Positions are sorted,
+        duplicates masked to a scrap lane, and each surviving position adds
+        its single bit to its lane — distinct bits in a lane sum to their OR,
+        so the transient is O(n log n) sort work + one uint32[total_u32 + 1]
+        buffer instead of the O(total_bits) bool bitmap (a 2M-key build no
+        longer materialises a 32M-element temp).  ``bitmap=True`` keeps the
+        legacy bit-expanded path for exactness tests."""
+        if bitmap:
+            temp = jnp.zeros(self.layout.total_bits, jnp.bool_)
+            temp = (temp.at[pos].set(True) if vals is None
+                    else temp.at[pos].max(vals))
+            lanes = temp.reshape(-1, 32).astype(jnp.uint32)
+            packed = jnp.sum(
+                lanes << jnp.arange(32, dtype=jnp.uint32)[None, :],
+                axis=1, dtype=jnp.uint32)
+            return state | packed
+        pos = jnp.asarray(pos, self.pos_dtype)
+        if pos.shape[0] == 0:
+            return state
+        scrap = jnp.asarray(self.layout.total_bits, self.pos_dtype)
+        if vals is not None:
+            pos = jnp.where(vals, pos, scrap)
+        ps = jnp.sort(pos)
+        keep = jnp.concatenate(
+            [jnp.ones((1,), jnp.bool_), ps[1:] != ps[:-1]]) & (ps < scrap)
+        lane = jnp.where(keep, (ps >> 5).astype(jnp.int32),
+                         self.layout.total_u32)
+        bit = jnp.where(keep, jnp.uint32(1) << (ps & 31).astype(jnp.uint32),
+                        jnp.uint32(0))
+        packed = jnp.zeros(self.layout.total_u32 + 1,
+                           jnp.uint32).at[lane].add(bit)
+        return state | packed[:-1]
 
     def insert(self, state: jax.Array, keys) -> jax.Array:
-        """Bulk insert: scatter into a transient bit-expanded buffer, pack,
-        OR into the packed state.  Exact w.r.t. duplicate positions."""
+        """Bulk insert via the lane-packed ``scatter_or`` (sort + dedup +
+        scatter-add; no O(total_bits) transient).  Exact w.r.t. duplicate
+        positions."""
         keys = jnp.atleast_1d(jnp.asarray(keys, self.kdtype))
         pos = jax.vmap(self._positions_one)(keys).reshape(-1)
         return self.scatter_or(state, pos)
@@ -146,8 +190,9 @@ class BloomRF:
         return self.insert(self.init_state(), keys)
 
     def build_np(self, keys_np: np.ndarray, chunk: int = 1 << 20) -> jax.Array:
-        """Host-side bulk build for very large key sets (numpy OR-scatter);
-        avoids the O(total_bits) transient of ``insert``."""
+        """Host-side chunked bulk build for very large key sets (numpy
+        OR-scatter); bounds peak memory to one position chunk when the key
+        set itself dwarfs device memory."""
         buf = np.zeros(self.layout.total_u32, np.uint32)
         posf = jax.jit(jax.vmap(self._positions_one))
         for s in range(0, len(keys_np), chunk):
@@ -160,6 +205,16 @@ class BloomRF:
     # point lookup
     # ------------------------------------------------------------------
     def point(self, state: jax.Array, ys) -> jax.Array:
+        """Batched point lookup via the probe engine (one fused gather)."""
+        ys = jnp.asarray(ys, self.kdtype)
+        scalar = ys.ndim == 0
+        ys = jnp.atleast_1d(ys)
+        res = self.engine.point_batched(state, ys)
+        return res[0] if scalar else res
+
+    def point_reference(self, state: jax.Array, ys) -> jax.Array:
+        """Pre-engine point path (per-key gather); the bit-identity oracle
+        for the engine and the Pallas kernels (kernels/ref.py)."""
         ys = jnp.asarray(ys, self.kdtype)
         scalar = ys.ndim == 0
         ys = jnp.atleast_1d(ys)
@@ -370,6 +425,19 @@ class BloomRF:
         return result
 
     def range(self, state: jax.Array, lo, hi) -> jax.Array:
+        """Batched range lookup via the probe engine: one fused gather of
+        the deduped word table, then register-only combine (DESIGN.md §9)."""
+        lo = jnp.asarray(lo, self.kdtype)
+        hi = jnp.asarray(hi, self.kdtype)
+        scalar = lo.ndim == 0
+        lo = jnp.atleast_1d(lo)
+        hi = jnp.atleast_1d(hi)
+        res = self.engine.range_batched(state, lo, hi)
+        return res[0] if scalar else res
+
+    def range_reference(self, state: jax.Array, lo, hi) -> jax.Array:
+        """Pre-engine range path (vmapped scalar ``_range_one``); the
+        bit-identity oracle for the engine and the Pallas kernels."""
         lo = jnp.asarray(lo, self.kdtype)
         hi = jnp.asarray(hi, self.kdtype)
         scalar = lo.ndim == 0
@@ -382,15 +450,20 @@ class BloomRF:
     # cost accounting (fig. 12g)
     # ------------------------------------------------------------------
     def word_accesses_per_range_query(self) -> int:
-        """Static upper bound on word loads per range query (paper: <= 4/layer
-        + coverings, times replicas)."""
+        """Static word loads per range query under the deduped engine plan
+        (paper: <= 4/layer, times replicas).
+
+        Each layer costs exactly the two child-word pairs of the left and
+        right parents (2 paths x 2 words x replicas); the two covering-bit
+        probes are served from those same words — the covering word of ``x``
+        at layer i is child word A or B of ``x``'s parent — so they add
+        nothing.  Exact layouts add the two exact covering bits plus one
+        amortized lane for the bounded middle scan.  The engine's static
+        plan matches this count (``ProbeEngine.range_word_loads``); a test
+        asserts the correspondence including the gather width ``A``."""
         lay = self.layout
-        total = 0
-        for i in range(lay.k):
-            words = 4 if lay.deltas[i] > 1 else 2  # 2 words/path only if Δ>1
-            cov = 2 if i > 0 else 0
-            total += (words + cov) * lay.replicas[i]
-        if lay.has_exact:
+        total = sum(4 * lay.replicas[i] for i in range(lay.k))
+        if lay.has_exact and lay.top_level < lay.d:
             total += 3  # two covering bits + (amortized) mid scan
         return total
 

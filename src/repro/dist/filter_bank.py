@@ -23,6 +23,11 @@ Routing is branch-free SPMD:
 with the state sharded over a mesh axis and verdicts all-gathered via psum —
 the two are bitwise-identical by construction, which the test suite checks
 on 1e5-probe workloads.
+
+Probes route through the plan->gather->combine engine (core/engine.py):
+each shard's point/range verdict is one fused ``state[lanes]`` gather over
+its row with covering-bit loads deduped against the child-word loads, so
+the engine's 4-loads-per-layer access count lands in every bank path.
 """
 from __future__ import annotations
 

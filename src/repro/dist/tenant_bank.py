@@ -42,6 +42,12 @@ Both classes share the per-(tenant, shard) bodies, so the shard_map variant
 is bitwise-identical to the vmapped single-device reference by construction
 — asserted on >= 1e5 mixed point/range probes across an 8-device
 (replica x data) mesh in ``tests/test_tenant_bank.py``.
+
+Main-filter and meta-filter probes both route through the
+plan->gather->combine engine (core/engine.py): the meta-filter AND in
+``range(..., meta)`` is two fused gathers per (tenant, shard) — one over
+the main row, one over the coarse row — with covering-bit loads deduped
+against child-word loads in each.
 """
 from __future__ import annotations
 

@@ -7,7 +7,7 @@ TPU VMEM tiling (see DESIGN.md §3 for the hardware adaptation).
 from .insert import insert_resident
 from .ops import FilterOps
 from .probe import point_probe_partitioned, point_probe_resident
-from .rangeprobe import range_probe_resident
+from .rangeprobe import range_probe_partitioned, range_probe_resident
 
 __all__ = [
     "FilterOps",
@@ -15,4 +15,5 @@ __all__ = [
     "point_probe_partitioned",
     "insert_resident",
     "range_probe_resident",
+    "range_probe_partitioned",
 ]

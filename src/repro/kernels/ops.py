@@ -25,8 +25,9 @@ class FilterOps:
     """Layout-bound kernel dispatcher.
 
     * small filters (<= ``vmem_budget_u32`` lanes) -> VMEM-resident kernels;
-    * large filters -> block-partitioned probe kernel;
-    * exact-layer layouts (range) -> XLA path (dynamic bounded scan).
+    * large filters -> block-partitioned point AND range probe kernels
+      (HBM-scale filters no longer fall back to XLA for range queries);
+    * exact-layer layouts (range) -> XLA engine path (dynamic bounded scan).
     """
 
     def __init__(self, layout: FilterLayout, interpret: bool | None = None,
@@ -56,9 +57,14 @@ class FilterOps:
                                               interpret=self.interpret)
 
     def range(self, state, lo, hi):
-        if self.resident and not self.layout.has_exact:
+        if self.layout.has_exact:  # bounded dynamic scan: XLA engine path
+            return self.filter.range(state,
+                                     jnp.asarray(lo, self.filter.kdtype),
+                                     jnp.asarray(hi, self.filter.kdtype))
+        if self.resident:
             return _rangeprobe.range_probe_resident(self.layout, state, lo,
                                                     hi,
                                                     interpret=self.interpret)
-        return self.filter.range(state, jnp.asarray(lo, self.filter.kdtype),
-                                 jnp.asarray(hi, self.filter.kdtype))
+        return _rangeprobe.range_probe_partitioned(self.layout, state, lo,
+                                                   hi,
+                                                   interpret=self.interpret)

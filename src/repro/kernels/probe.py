@@ -45,18 +45,42 @@ def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
+def _bucket_probes(lane: jax.Array, tile: int, block_u32: int, nblocks: int):
+    """Bucket flat lane probes by filter block for the partitioned kernels.
+
+    Sorts probes by owning block and pads each block's probe list to a tile
+    multiple so no kernel tile spans two blocks.  Returns ``(order, slot,
+    lane_b, tile_block, capr)``: the sort permutation, each sorted probe's
+    destination slot, the padded lane table (-1 = padding), the per-tile
+    block id (scalar prefetch input), and the padded length.  Callers
+    scatter their per-probe payloads with ``.at[slot].set(payload[order])``.
+    Shared by the point and range partitioned kernels — the padding
+    invariants live here once."""
+    nprobe = lane.shape[0]
+    blk = lane // block_u32
+    order = jnp.argsort(blk)
+    lane_s, blk_s = lane[order], blk[order]
+    counts = jnp.bincount(blk_s, length=nblocks)
+    padded_counts = ((counts + tile - 1) // tile) * tile
+    starts = jnp.concatenate([jnp.zeros(1, padded_counts.dtype),
+                              jnp.cumsum(padded_counts)])[:-1]
+    rank = jnp.arange(nprobe) - jnp.cumsum(
+        jnp.concatenate([jnp.zeros(1, counts.dtype), counts]))[:-1][blk_s]
+    slot = starts[blk_s] + rank
+    capr = _round_up(nprobe + nblocks * tile, tile)  # worst-case padding
+    lane_b = jnp.full(capr, -1, jnp.int32).at[slot].set(lane_s)
+    tile_block = jnp.where(lane_b[::tile] < 0, 0,
+                           lane_b[::tile] // block_u32).astype(jnp.int32)
+    return order, slot, lane_b, tile_block, capr
+
+
 # ---------------------------------------------------------------------------
 # resident variant
 # ---------------------------------------------------------------------------
 
 def _resident_kernel(keys_ref, state_ref, out_ref, *, filt: BloomRF):
-    keys = keys_ref[...]
-    state = state_ref[...]
-    pos = jax.vmap(filt._positions_one)(keys)          # (TILE, P)
-    lane = (pos >> 5).astype(jnp.int32)
-    sh = (pos & 31).astype(jnp.uint32)
-    bits = (state[lane] >> sh) & jnp.uint32(1)
-    out_ref[...] = jnp.all(bits == 1, axis=1)
+    # plan->gather->combine engine traced over the tile: one fused gather
+    out_ref[...] = filt.engine.point_batched(state_ref[...], keys_ref[...])
 
 
 @functools.partial(jax.jit, static_argnums=(0, 3, 4))
@@ -119,33 +143,16 @@ def point_probe_partitioned(layout: FilterLayout, state: jax.Array, keys,
     nblocks = _round_up(U, block_u32) // block_u32
     state_p = jnp.pad(state, (0, nblocks * block_u32 - U))
 
-    pos = jax.vmap(filt._positions_one)(keys)           # (B, P)
-    P = pos.shape[1]
-    lane = (pos >> 5).astype(jnp.int32).reshape(-1)     # (B*P,)
-    sh = (pos & 31).astype(jnp.int32).reshape(-1)
+    plan = filt.engine.plan_point(keys)                 # lanes/sh (B, P)
+    P = plan.lanes.shape[1]
+    lane = plan.lanes.reshape(-1)                       # (B*P,)
+    sh = plan.sh.astype(jnp.int32).reshape(-1)
     keyid = jnp.repeat(jnp.arange(B, dtype=jnp.int32), P)
-    blk = lane // block_u32
 
-    # sort probes by block; pad so no tile spans two blocks
-    order = jnp.argsort(blk)
-    lane_s, sh_s, key_s, blk_s = lane[order], sh[order], keyid[order], blk[order]
-    nprobe = B * P
-    # per-probe destination slot: block_start_padded + rank_within_block
-    counts = jnp.bincount(blk_s, length=nblocks)
-    padded_counts = ((counts + tile - 1) // tile) * tile
-    starts = jnp.concatenate([jnp.zeros(1, padded_counts.dtype),
-                              jnp.cumsum(padded_counts)])[:-1]
-    rank = jnp.arange(nprobe) - jnp.cumsum(
-        jnp.concatenate([jnp.zeros(1, counts.dtype), counts]))[:-1][blk_s]
-    slot = starts[blk_s] + rank
-    cap = nprobe + nblocks * tile               # worst-case padded length
-    capr = _round_up(cap, tile)
-    lane_b = jnp.full(capr, -1, jnp.int32).at[slot].set(lane_s)
-    sh_b = jnp.zeros(capr, jnp.int32).at[slot].set(sh_s)
-    key_b = jnp.full(capr, B, jnp.int32).at[slot].set(key_s)  # B = scrap key
-    # block id per tile (scalar prefetch)
-    tile_block = jnp.where(lane_b[::tile] < 0, 0,
-                           lane_b[::tile] // block_u32).astype(jnp.int32)
+    order, slot, lane_b, tile_block, capr = _bucket_probes(
+        lane, tile, block_u32, nblocks)
+    sh_b = jnp.zeros(capr, jnp.int32).at[slot].set(sh[order])
+    key_b = jnp.full(capr, B, jnp.int32).at[slot].set(keyid[order])  # B=scrap
 
     ntiles = capr // tile
     grid_spec = pltpu.PrefetchScalarGridSpec(

@@ -1,15 +1,28 @@
-"""Pallas TPU kernel: batched bloomRF range probes.
+"""Pallas TPU kernels: batched bloomRF range probes.
 
-The two-path dyadic range lookup (core ``_range_one``) is traced *inside* the
-kernel over a query tile, with the filter resident in VMEM.  The core math is
-branch-free (live/dead masks instead of early exits), so the kernel is pure
-vector work over the tile: per layer, <= 4 word loads + 2 covering bits per
-query, exactly the paper's access bound.
+Both variants trace the plan->gather->combine engine (core/engine.py,
+DESIGN.md §9) instead of vmapping the scalar reference path: the per-tile
+word table is one fused ``state[lanes]`` gather of shape ``(tile, A)`` with
+covering-bit loads deduped against the child-word loads (4 word loads per
+layer per replica), and the combine phase is pure vector work on registers.
 
-Layout restrictions for the kernel path: no exact segment (its bounded lane
-scan is a dynamic while_loop — fine for XLA, not for a TPU kernel); everything
-else (variable Δ, replicas, multi-segment) is supported.  Exact-layer layouts
-fall back to the XLA path in ``ops.py``.
+* ``range_probe_resident`` — the whole filter is pinned in VMEM (BlockSpec
+  maps the full state to every grid step); the grid tiles the query batch.
+
+* ``range_probe_partitioned`` — HBM-scale filters, mirroring
+  ``point_probe_partitioned``: the engine's *plan* runs in XLA and flattens
+  to ``B * A`` lane probes, which are pre-bucketed by filter block
+  (argsort), padded so no tile spans two blocks, and walked by a kernel
+  with the owning block scalar-prefetch-DMA'd into VMEM.  Gathered lane
+  values are scattered back into the ``(B, A)`` word matrix and the
+  engine's *combine* finishes in XLA — verdicts are bit-identical to the
+  resident kernel and the XLA path by construction (same plan, same words,
+  same combine).
+
+Layout restrictions for both kernel paths: no exact segment (its bounded
+lane scan is a dynamic while_loop — fine for XLA, not for a TPU kernel);
+everything else (variable Δ, replicas, multi-segment) is supported.
+Exact-layer layouts fall back to the XLA path in ``ops.py``.
 """
 from __future__ import annotations
 
@@ -18,11 +31,13 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from ..core import BloomRF, FilterLayout
+from .probe import DEFAULT_BLOCK_U32, _bucket_probes
 from .ref import check_kernel_layout
 
-__all__ = ["range_probe_resident"]
+__all__ = ["range_probe_resident", "range_probe_partitioned"]
 
 DEFAULT_TILE = 512
 
@@ -31,19 +46,26 @@ def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
+def _check_range_kernel_layout(layout: FilterLayout) -> None:
+    check_kernel_layout(layout)
+    if layout.has_exact:
+        raise ValueError("exact-layer layouts use the XLA path (ops.py)")
+
+
+# ---------------------------------------------------------------------------
+# resident variant
+# ---------------------------------------------------------------------------
+
 def _range_kernel(lo_ref, hi_ref, state_ref, out_ref, *, filt: BloomRF):
-    lo = lo_ref[...]
-    hi = hi_ref[...]
-    state = state_ref[...]
-    out_ref[...] = jax.vmap(functools.partial(filt._range_one, state))(lo, hi)
+    out_ref[...] = filt.engine.range_batched(state_ref[...], lo_ref[...],
+                                             hi_ref[...])
 
 
 @functools.partial(jax.jit, static_argnums=(0, 4, 5))
 def range_probe_resident(layout: FilterLayout, state: jax.Array, lo, hi,
                          tile: int = DEFAULT_TILE, interpret: bool = True):
-    check_kernel_layout(layout)
-    if layout.has_exact:
-        raise ValueError("exact-layer layouts use the XLA path (ops.py)")
+    """Batched range probe with the filter resident in VMEM."""
+    _check_range_kernel_layout(layout)
     filt = BloomRF(layout)
     lo = jnp.asarray(lo, jnp.uint32)
     hi = jnp.asarray(hi, jnp.uint32)
@@ -65,3 +87,73 @@ def range_probe_resident(layout: FilterLayout, state: jax.Array, lo, hi,
         interpret=interpret,
     )(lo_p, hi_p, state)
     return out[:B]
+
+
+# ---------------------------------------------------------------------------
+# partitioned variant (HBM-scale filters)
+# ---------------------------------------------------------------------------
+
+def _gather_block_kernel(tile_block, lane_ref, block_ref, out_ref, *,
+                         block_u32: int):
+    del tile_block  # consumed by the index maps
+    lane = lane_ref[...]                      # global lane ids, -1 = padding
+    local = jnp.where(lane < 0, 0, lane % block_u32).astype(jnp.int32)
+    word = block_ref[...][local]
+    out_ref[...] = jnp.where(lane < 0, jnp.uint32(0), word)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4, 5, 6))
+def range_probe_partitioned(layout: FilterLayout, state: jax.Array, lo, hi,
+                            tile: int = DEFAULT_TILE,
+                            block_u32: int = DEFAULT_BLOCK_U32,
+                            interpret: bool = True):
+    """Batched range probe for filters too large for VMEM.
+
+    XLA side: run the engine's plan (pure arithmetic -> the (B, A) lane
+    table), flatten to lane probes, sort probes by filter block, pad each
+    block's probe list to a tile multiple.  Pallas side: walk tiles with the
+    owning block scalar-prefetch-mapped into VMEM, emitting the gathered
+    lane *values*.  XLA side again: scatter values back to the (B, A) word
+    matrix and run the engine's combine.
+    """
+    _check_range_kernel_layout(layout)
+    filt = BloomRF(layout)
+    eng = filt.engine
+    lo = jnp.asarray(lo, jnp.uint32)
+    hi = jnp.asarray(hi, jnp.uint32)
+    B = lo.shape[0]
+    U = layout.total_u32
+    nblocks = _round_up(U, block_u32) // block_u32
+    state_p = jnp.pad(state, (0, nblocks * block_u32 - U))
+
+    plan = eng.plan_range(lo, hi)
+    A = plan.lanes.shape[-1]
+    nprobe = B * A
+    lane = plan.lanes.reshape(-1)                       # (B*A,)
+    flat = jnp.arange(nprobe, dtype=jnp.int32)          # original matrix slot
+
+    order, slot, lane_b, tile_block, capr = _bucket_probes(
+        lane, tile, block_u32, nblocks)
+    flat_b = jnp.full(capr, nprobe, jnp.int32).at[slot].set(flat[order])
+
+    ntiles = capr // tile
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(ntiles,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda t, tb: (t,)),
+            pl.BlockSpec((block_u32,), lambda t, tb: (tb[t],)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda t, tb: (t,)),
+    )
+    vals = pl.pallas_call(
+        functools.partial(_gather_block_kernel, block_u32=block_u32),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((capr,), jnp.uint32),
+        interpret=interpret,
+    )(tile_block, lane_b, state_p)
+
+    # scatter gathered words back into the (B, A) matrix; padding -> scrap
+    g = jnp.zeros(nprobe + 1, jnp.uint32).at[flat_b].set(vals)
+    g = g[:-1].reshape(B, A)
+    return eng.combine_range(g, plan)

@@ -1,11 +1,13 @@
 """Pure-jnp oracles for the Pallas kernels.
 
-The kernels deliberately *reuse* the core bloomRF math (``repro.core``), so
-the oracle is the core filter evaluated directly — kernel results must match
-bit-for-bit, not just approximately.  Kernels operate on 32-bit sub-domains
-(d <= 32): the distributed deployment range-partitions a 64-bit key space by
-its top bits across shards, keeping all TPU lane arithmetic native uint32
-(DESIGN.md §3).
+The oracles are pinned to the *pre-engine reference path*
+(``BloomRF.point_reference`` / ``range_reference`` — per-key scalar probes
+under ``vmap``), NOT the plan->gather->combine engine the kernels now trace.
+That makes kernel parity a genuine cross-implementation check: engine-based
+kernels must match the legacy scalar math bit-for-bit, not just match
+themselves.  Kernels operate on 32-bit sub-domains (d <= 32): the
+distributed deployment range-partitions a 64-bit key space by its top bits
+across shards, keeping all TPU lane arithmetic native uint32 (DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -24,13 +26,13 @@ def check_kernel_layout(layout: FilterLayout) -> None:
 
 def point_ref(layout: FilterLayout, state: jax.Array, keys: jax.Array):
     check_kernel_layout(layout)
-    return BloomRF(layout).point(state, keys)
+    return BloomRF(layout).point_reference(state, keys)
 
 
 def range_ref(layout: FilterLayout, state: jax.Array, lo: jax.Array,
               hi: jax.Array):
     check_kernel_layout(layout)
-    return BloomRF(layout).range(state, lo, hi)
+    return BloomRF(layout).range_reference(state, lo, hi)
 
 
 def insert_ref(layout: FilterLayout, state: jax.Array, keys: jax.Array):

@@ -24,7 +24,10 @@ are answered against ``main & meta`` — strictly fewer false positives.
 Keys stay in a 32-bit domain (16-bit session, 16-bit chunk) so the filters
 run without the x64 flag in serving processes.  Filters never produce false
 negatives -> no cached prefix is ever missed; a false positive costs one
-extra map probe (counted in stats).
+extra map probe (counted in stats).  All filter probes (point lookups,
+session ranges, eviction sweeps, and the meta AND) route through the
+plan->gather->combine engine (core/engine.py), so each segment consult is
+a single fused gather over the tenant's filter row.
 """
 from __future__ import annotations
 
