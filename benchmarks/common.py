@@ -1,12 +1,20 @@
-"""Shared benchmark utilities: datasets, workloads, timing, FPR measurement.
+"""Shared benchmark utilities: datasets, workloads, timing, FPR measurement,
+and the machine-readable JSON emitters the CI gates consume.
 
 Benchmarks mirror the paper's standalone methodology (§9): build a filter
 over n keys, issue Q range- (or point-) queries of a fixed size per setting,
 and report FPR over empty queries + mean probe latency.  Distributions:
 uniform / normal / zipfian for both data and queries (Fig. 9/11).
+
+``timeit`` and ``write_json`` are the single copies of the warm-up-once
+timing loop and the ``{schema, rows: [{name, <value>, <detail>}]}`` JSON
+shape previously duplicated across the bench drivers — every driver
+(``run.py``, ``dist_bench.py``, ``store_bench.py``) routes through them so
+the CI validators keep one contract.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -17,6 +25,31 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 os.environ.setdefault("JAX_ENABLE_X64", "1")
 
 U64MAX = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+def timeit(fn, *args, repeat: int = 3) -> float:
+    """Seconds per call: warm up exactly once (compile + drain), then the
+    mean of ``repeat`` timed calls (block_until_ready handles pytrees)."""
+    import jax
+
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / repeat
+
+
+def write_json(path: str, schema: str, rows, value_key: str = "us_per_call",
+               detail_key: str = "derived", **extra) -> None:
+    """Write ``(name, value, detail)`` rows as the CI benchmark JSON shape."""
+    payload = {
+        "schema": schema,
+        **extra,
+        "rows": [{"name": n, value_key: float(u), detail_key: str(d)}
+                 for n, u, d in rows],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
 
 
 def gen_keys(n: int, dist: str, rng: np.random.Generator) -> np.ndarray:

@@ -24,13 +24,11 @@ machine-readable JSON (consumed by the CI benchmark job).
 from __future__ import annotations
 
 import argparse
-import json
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from common import emit
+from common import emit, timeit as _time, write_json
 
 from repro.core import BloomRF, basic_layout
 from repro.dist.filter_bank import FilterBank, ShardedFilterBank
@@ -38,14 +36,6 @@ from repro.dist.tenant_bank import ShardedTenantFilterBank, TenantFilterBank
 from repro.kernels import FilterOps
 
 SCHEMA = "bloomrf-dist-bench/v1"
-
-
-def _time(fn, *args, repeat: int = 3):
-    jax.block_until_ready(fn(*args))  # compile + drain the warm-up
-    t0 = time.perf_counter()
-    for _ in range(repeat):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / repeat
 
 
 def _tenant_meshes(n_tenants: int):
@@ -157,22 +147,18 @@ def main() -> None:
         f"main={main_wa};meta={meta_wa};effective={eff_wa:.2f}")
 
     if args.json:
-        payload = {
-            "schema": SCHEMA,
-            "config": {k: v for k, v in vars(args).items() if k != "json"},
-            "devices": len(jax.devices()),
-            "rows": [{"name": n, "us_per_query": float(u), "detail": str(d)}
-                     for n, u, d in rows],
-            "meta_filter": {
+        write_json(
+            args.json, SCHEMA, rows,
+            value_key="us_per_query", detail_key="detail",
+            config={k: v for k, v in vars(args).items() if k != "json"},
+            devices=len(jax.devices()),
+            meta_filter={
                 "candidates": cand, "skipped": skip,
                 "skip_rate": skip_rate,
                 "word_accesses_main": main_wa,
                 "word_accesses_meta": meta_wa,
                 "word_accesses_effective": eff_wa,
-            },
-        }
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=1)
+            })
 
 
 if __name__ == "__main__":

@@ -5,27 +5,16 @@ On this CPU container the XLA path is the performance-relevant number; the
 Pallas kernels target TPU (validated bit-identical in interpret mode —
 tests/test_kernels.py) and are benchmarked here only for dispatch overhead
 sanity."""
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import BloomRF, basic_layout
 
-from .common import emit, gen_keys
+from .common import emit, gen_keys, timeit as _time
 
 N = 1_000_000
 Q = 200_000
-
-
-def _time(fn, *args, reps=3):
-    # warm up exactly once (block_until_ready handles tuples/pytrees)
-    jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / reps
 
 
 def run():

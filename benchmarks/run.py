@@ -10,7 +10,6 @@ Usage: PYTHONPATH=src python -m benchmarks.run [--only fig09,fig12]
 on malformed output).
 """
 import argparse
-import json
 import sys
 import time
 
@@ -29,6 +28,8 @@ SMOKE = {
               "BPKS": (16,), "RLOG2S": (10,)},
     "fig12": {"N": 20_000, "Q": 2_000, "MIX_OPS": 4_000, "LOOKUPS": 10_000},
     "kernels": {"N": 100_000, "Q": 50_000},
+    "store": {"N": 20_000, "OPS": 2_000, "MEMTABLE": 800, "SCAN_BATCH": 256,
+              "BACKENDS": ("bloomrf", "none", "prefix_bloom")},
 }
 
 
@@ -44,12 +45,12 @@ def main() -> None:
 
     from . import (fig08_space, fig09_ranges, fig10_space_budget,
                    fig11_holistic, fig12_online_and_more, kernels_bench,
-                   roofline_report)
+                   roofline_report, store_bench)
     modules = [
         ("fig08", fig08_space), ("fig09", fig09_ranges),
         ("fig10", fig10_space_budget), ("fig11", fig11_holistic),
         ("fig12", fig12_online_and_more), ("kernels", kernels_bench),
-        ("roofline", roofline_report),
+        ("store", store_bench), ("roofline", roofline_report),
     ]
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
@@ -67,16 +68,9 @@ def main() -> None:
     elapsed = time.time() - t0
     print(f"# total {elapsed:.1f}s", file=sys.stderr)
     if args.json:
-        payload = {
-            "schema": SCHEMA,
-            "smoke": args.smoke,
-            "only": sorted(only) if only else None,
-            "elapsed_s": elapsed,
-            "rows": [{"name": n, "us_per_call": float(u), "derived": str(d)}
-                     for n, u, d in rows],
-        }
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=1)
+        from .common import write_json
+        write_json(args.json, SCHEMA, rows, smoke=args.smoke,
+                   only=sorted(only) if only else None, elapsed_s=elapsed)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,181 @@
+"""LSM run-store benchmark: YCSB-E-style scan-heavy workload over the
+filter-pruned read path (the paper's RocksDB experiment, §9, standalone).
+
+For each key distribution and filter backend the driver loads N keys
+through the memtable (flushes + compactions build the run pyramid), then
+runs a mixed phase of OPS operations — ``SCAN_FRAC`` short range scans
+(YCSB-E's dominant op; scans batch through ``Store.scan_many``, ONE fused
+gather over all live runs' stacked filter state per batch) interleaved
+with inserts.  Reported per setting:
+
+* ``runs probed per scan``  — data-block reads a scan actually paid for
+  (the paper's pruned-SSTable-reads axis); the ``none`` backend is the
+  min/max-fence-only baseline every filter must beat,
+* ``scan FP-read rate``     — touched runs that held nothing in range,
+* ``bytes not read``        — data bytes the pruning saved,
+* ``us/op``                 — wall time of the mixed phase.
+
+Backends: ``bloomrf`` (stacked one-gather probes), ``none`` (fences
+only), plus host-side baselines from ``repro.filters``.
+
+Run standalone (full sizes; the nightly row):
+  PYTHONPATH=src python -m benchmarks.store_bench --json BENCH_STORE.json
+or at CI sizes via ``--smoke`` / ``python -m benchmarks.run --smoke``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.store import Store, StoreConfig
+
+from .common import emit, gen_keys, write_json
+
+SCHEMA = "bloomrf-store-bench/v1"
+
+# sizes (patched by benchmarks.run --smoke / --smoke here)
+N = 200_000          # load-phase keys
+OPS = 10_000         # mixed-phase operations
+MEMTABLE = 8_192     # memtable flush threshold (capacity class 0)
+LEVEL0 = 8           # level-0 run count triggering compaction
+FANOUT = 4
+BPK = 14.0           # filter bits per key
+RSIZE = 1 << 8       # scan range width (short YCSB-E scans)
+SCAN_FRAC = 0.95     # YCSB-E: 95% scans / 5% inserts
+SCAN_BATCH = 512     # scans per fused probe batch
+NEAR_MISS = 0.2      # share of scans starting just past a stored key
+DISTS = ("uniform", "zipf")
+BACKENDS = ("bloomrf", "none", "prefix_bloom", "rosetta")
+
+
+def _keys(n: int, dist: str, rng) -> np.ndarray:
+    """Keys in the store's 32-bit domain.
+
+    zipf keys are drawn directly in the small domain (cluster scaled to
+    2^31 with a 2^22 jitter window) — truncating the 64-bit generator's
+    output would drop the jitter bits and collapse the cluster onto a
+    handful of duplicate keys."""
+    if dist == "zipf":
+        z = rng.zipf(1.2, n).astype(np.float64)
+        z = z / (z.max() + 1.0)
+        jitter = rng.integers(0, 1 << 22, n, dtype=np.uint64)
+        return np.minimum((z * float(1 << 31)).astype(np.uint64) + jitter,
+                          np.uint64((1 << 32) - 1))
+    return gen_keys(n, dist, rng) >> np.uint64(32)
+
+
+def _scan_starts(n: int, data: np.ndarray, rng) -> np.ndarray:
+    """Scan start keys: mostly-empty queries, the range-filter literature's
+    evaluation regime (the paper measures FPR over empty ranges).
+
+    ``1 - NEAR_MISS`` of the starts are uniform over the domain (empty
+    wherever the data is sparse); ``NEAR_MISS`` are *correlated near
+    misses* — a stored key plus a small gap, the adversarial case for
+    prefix-based filters (cf. Rosetta/Proteus workloads)."""
+    uni = rng.integers(0, 1 << 31, n, dtype=np.uint64)
+    anchor = data[rng.integers(0, len(data), n)]
+    gap = rng.integers(RSIZE, 32 * RSIZE, n, dtype=np.uint64)
+    near = np.minimum(anchor + gap, np.uint64((1 << 32) - 1))
+    take_near = rng.random(n) < NEAR_MISS
+    return np.where(take_near, near, uni)
+
+
+def run_one(backend: str, dist: str, seed: int = 0x57043) -> tuple:
+    """(store, us_per_op) after load + mixed phase; same op stream for
+    every backend (seeded), so pruning metrics are directly comparable."""
+    import dataclasses
+
+    rng = np.random.default_rng(seed)
+    store = Store(StoreConfig(
+        d=32, memtable_limit=MEMTABLE, level0_runs=LEVEL0, fanout=FANOUT,
+        bits_per_key=BPK, filter_backend=backend))
+    data = _keys(N, dist, rng)
+    for i, k in enumerate(data):
+        store.put(int(k), i)
+    store.flush()
+
+    # whole batches only, so one compiled probe shape serves the phase
+    n_scans = max(int(OPS * SCAN_FRAC) // SCAN_BATCH, 1) * SCAN_BATCH
+    n_ins = max(OPS - n_scans, 0)
+    lo = _scan_starts(n_scans, data, rng)
+    hi = np.minimum(lo + np.uint64(max(RSIZE - 1, 0)), np.uint64((1 << 32) - 1))
+    ins = _keys(max(n_ins, 1), dist, rng)
+    # warm up the fused probe (compile) outside the timed phase, then undo
+    # the warm-up's counter contribution
+    pre = dataclasses.replace(store.stats)
+    store.scan_many(lo[:SCAN_BATCH], hi[:SCAN_BATCH])
+    store.stats = pre
+    t0 = time.perf_counter()
+    done_ins = 0
+    for s in range(0, n_scans, SCAN_BATCH):
+        store.scan_many(lo[s:s + SCAN_BATCH], hi[s:s + SCAN_BATCH])
+        # interleave the insert share owed by this slice of the stream
+        owed = round(n_ins * min(s + SCAN_BATCH, n_scans) / n_scans)
+        for k in ins[done_ins:owed]:
+            store.put(int(k), 0)
+        done_ins = owed
+    dt = time.perf_counter() - t0
+    return store, dt / max(n_scans + n_ins, 1) * 1e6
+
+
+def metrics(store: Store, us_per_op: float) -> dict:
+    s = store.stats
+    total_bytes = max(s.bytes_read + s.bytes_not_read, 1)
+    return {
+        "runs_probed_per_scan": s.runs_probed_per_scan,
+        "scan_fp_read_rate": s.scan_fp_read_rate,
+        "scan_filter_skips": s.scan_filter_skips,
+        "scan_fence_skips": s.scan_fence_skips,
+        "scans": s.scans,
+        "runs_live": store.n_runs,
+        "compactions": s.compactions,
+        "or_merges": s.or_merges,
+        "rebuild_merges": s.rebuild_merges,
+        "bytes_not_read_frac": s.bytes_not_read / total_bytes,
+        "us_per_op": us_per_op,
+    }
+
+
+def run(section: dict | None = None):
+    """Bench rows (+ per-setting metrics into ``section`` when given)."""
+    rows = []
+    for dist in DISTS:
+        for backend in BACKENDS:
+            store, us = run_one(backend, dist)
+            m = metrics(store, us)
+            if section is not None:
+                section[f"{dist}/{backend}"] = m
+            rows.append(emit(
+                f"store/{dist}/{backend}", us,
+                f"runs/scan={m['runs_probed_per_scan']:.3f};"
+                f"fp={m['scan_fp_read_rate']:.3f};"
+                f"runs={m['runs_live']};"
+                f"bytes_saved={m['bytes_not_read_frac']:.3f}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizes (benchmarks.run's smoke registry)")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args()
+    if args.smoke:
+        from . import run as run_mod
+        for attr, val in run_mod.SMOKE["store"].items():
+            globals()[attr] = val
+    section: dict = {}
+    print("name,us_per_call,derived")
+    rows = run(section)
+    if args.json:
+        write_json(args.json, SCHEMA, rows, value_key="us_per_op",
+                   smoke=args.smoke, store=section,
+                   config={"N": N, "OPS": OPS, "memtable": MEMTABLE,
+                           "level0": LEVEL0, "fanout": FANOUT, "bpk": BPK,
+                           "rsize": RSIZE, "scan_frac": SCAN_FRAC})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,7 @@
 """bloomRF core: the paper's contribution as a composable JAX module."""
 from .bloomrf import BloomRF
-from .engine import PointPlan, ProbeEngine, RangePlan
+from .engine import (PointPlan, ProbeEngine, RangePlan, StackedProbe,
+                     stacked_probe)
 from .hashing import dyadic_prefixes, key_dtype_for
 from .layout import FilterLayout, basic_layout, require_x64
 
@@ -12,6 +13,8 @@ __all__ = [
     "ProbeEngine",
     "RangePlan",
     "PointPlan",
+    "StackedProbe",
+    "stacked_probe",
     "dyadic_prefixes",
     "key_dtype_for",
 ]

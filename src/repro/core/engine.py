@@ -46,6 +46,7 @@ over a tile and what the sharded banks route through.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -55,7 +56,8 @@ import numpy as np
 from .bloomrf import _FULL, BloomRF
 from .hashing import mix
 
-__all__ = ["ProbeEngine", "RangePlan", "PointPlan"]
+__all__ = ["ProbeEngine", "RangePlan", "PointPlan", "StackedProbe",
+           "stacked_probe"]
 
 
 class _Slot(NamedTuple):
@@ -350,3 +352,144 @@ class ProbeEngine:
     def point_batched(self, state: jax.Array, ys) -> jax.Array:
         plan = self.plan_point(ys)
         return self.combine_point(self.gather(state, plan.lanes), plan)
+
+
+# ---------------------------------------------------------------------------
+# multi-filter stacked plan: R filter rows, ONE fused gather
+# ---------------------------------------------------------------------------
+
+class StackedProbe:
+    """Probe ``R`` stacked filter rows with one fused gather per query batch.
+
+    The rows live in a single flat ``uint32`` state vector; row ``r`` starts
+    at the static lane offset ``bases[r]`` and is addressed by
+    ``engines[r]`` (rows may use different layouts — an LSM store stacks
+    runs of several capacity classes, the tenant bank stacks main + meta
+    rows).  The plan phase emits every row's lane table with the row base
+    folded in, concatenates them along the lane axis, and issues a single
+    ``flat_state[lanes]`` gather of shape ``(B, sum_r A_r)``; each row's
+    verdict is then combined on registers exactly as
+    :meth:`ProbeEngine.combine_range` would for that row alone — verdicts
+    are bit-identical to probing each row separately.
+
+    Rows are processed as maximal *spans* of consecutive rows sharing a
+    layout, so bounds are selected with slices and verdicts re-assembled
+    with concatenation: the jaxpr of ``range_all``/``point_all`` contains
+    exactly one gather over the filter state, whatever the row mix
+    (asserted in the test suite).  Query bounds are either shared across
+    rows (shape ``(B,)``) or per-row (shape ``(B, R)`` — e.g. per-shard
+    clipped ranges).  Exact-bitmap layouts are rejected: their bounded
+    middle scan is a dynamic loop that cannot join the static plan.
+    """
+
+    def __init__(self, engines: Tuple[ProbeEngine, ...], bases: Tuple[int, ...]):
+        if not engines:
+            raise ValueError("need at least one stacked row")
+        if len(engines) != len(bases):
+            raise ValueError(
+                f"{len(engines)} engines vs {len(bases)} row bases")
+        kdtype = engines[0].filt.kdtype
+        for e in engines:
+            if e.lay.has_exact:
+                raise ValueError(
+                    "exact-bitmap layouts cannot be stacked (their bounded "
+                    "middle scan is dynamic); use per-row engine probes")
+            if e.filt.kdtype != kdtype:
+                raise ValueError("stacked rows must share one key dtype")
+        self.engines = tuple(engines)
+        self.bases = tuple(int(b) for b in bases)
+        self.R = len(engines)
+        # maximal consecutive spans sharing a layout: (engine, row0, row1)
+        spans = []
+        for r, e in enumerate(self.engines):
+            if spans and spans[-1][0].filt.layout == e.filt.layout:
+                spans[-1] = (spans[-1][0], spans[-1][1], r + 1)
+            else:
+                spans.append((e, r, r + 1))
+        self.spans = tuple(spans)
+        #: columns of the one fused (B, A) range gather, summed over rows
+        self.range_gather_width = sum(
+            (r1 - r0) * e.range_gather_width for e, r0, r1 in self.spans)
+        self._range_jit = jax.jit(self._range_all)
+        self._point_jit = jax.jit(self._point_all)
+
+    # -- bounds handling --------------------------------------------------
+    def _bounds(self, a, B: int, r0: int, r1: int):
+        """Span slice of shared ``(B,)`` or per-row ``(B, R)`` bounds."""
+        a = jnp.asarray(a)
+        if a.ndim == 1:
+            return jnp.broadcast_to(a[:, None], (B, r1 - r0))
+        if a.ndim != 2 or a.shape[1] != self.R:
+            raise ValueError(f"bounds must be (B,) or (B, {self.R}), "
+                             f"got {a.shape}")
+        return a[:, r0:r1]
+
+    # -- fused probes ------------------------------------------------------
+    def _range_all(self, flat_state: jax.Array, lo, hi) -> jax.Array:
+        lo = jnp.atleast_1d(jnp.asarray(lo))
+        hi = jnp.atleast_1d(jnp.asarray(hi))
+        B = lo.shape[0]
+        parts, plans = [], []
+        for e, r0, r1 in self.spans:
+            plan = e.plan_range(self._bounds(lo, B, r0, r1),
+                                self._bounds(hi, B, r0, r1))
+            # row bases fold in as python-int adds (no captured constant
+            # arrays — the Pallas stacked kernels trace this function)
+            shifted = jnp.stack(
+                [plan.lanes[:, i, :] + self.bases[r0 + i]
+                 for i in range(r1 - r0)], axis=1)
+            parts.append(shifted.reshape(B, -1))
+            plans.append(plan)
+        g = flat_state[jnp.concatenate(parts, axis=-1)]  # the one gather
+        out, off = [], 0
+        for (e, r0, r1), plan in zip(self.spans, plans):
+            G, A = r1 - r0, e.range_gather_width
+            gg = g[:, off:off + G * A].reshape(B, G, A)
+            off += G * A
+            out.append(e.combine_range(gg, plan))
+        return jnp.concatenate(out, axis=-1)              # (B, R)
+
+    def _point_all(self, flat_state: jax.Array, ys) -> jax.Array:
+        ys = jnp.atleast_1d(jnp.asarray(ys))
+        B = ys.shape[0]
+        parts, plans = [], []
+        for e, r0, r1 in self.spans:
+            plan = e.plan_point(ys)                       # lanes/sh (B, P)
+            shifted = jnp.stack(
+                [plan.lanes + self.bases[r] for r in range(r0, r1)], axis=1)
+            parts.append(shifted.reshape(B, -1))
+            plans.append(plan)
+        g = flat_state[jnp.concatenate(parts, axis=-1)]  # the one gather
+        out, off = [], 0
+        for (e, r0, r1), plan in zip(self.spans, plans):
+            G, P = r1 - r0, plan.lanes.shape[-1]
+            gg = g[:, off:off + G * P].reshape(B, G, P)
+            off += G * P
+            bits = (gg >> plan.sh[:, None, :]) & jnp.uint32(1)
+            out.append(jnp.all(bits == 1, axis=-1))
+        return jnp.concatenate(out, axis=-1)              # (B, R)
+
+    def range_all(self, flat_state: jax.Array, lo, hi) -> jax.Array:
+        """(B, R) bool: per-row range verdicts from one fused gather."""
+        return self._range_jit(flat_state, lo, hi)
+
+    def point_all(self, flat_state: jax.Array, ys) -> jax.Array:
+        """(B, R) bool: per-row point verdicts from one fused gather."""
+        return self._point_jit(flat_state, ys)
+
+
+@functools.lru_cache(maxsize=None)
+def _filter_for_layout(layout) -> BloomRF:
+    return BloomRF(layout)
+
+
+@functools.lru_cache(maxsize=None)
+def stacked_probe(layouts: tuple, bases: tuple) -> StackedProbe:
+    """Cached :class:`StackedProbe` for a row stack described by layouts.
+
+    Layouts are hashable frozen dataclasses, so call sites that re-stack the
+    same row mix (an LSM store after every flush/compaction, a bank per
+    construction) share one probe instance — and with it the jit cache of
+    the fused probe functions."""
+    engines = tuple(_filter_for_layout(lay).engine for lay in layouts)
+    return StackedProbe(engines, bases)

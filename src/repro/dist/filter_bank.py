@@ -24,10 +24,15 @@ with the state sharded over a mesh axis and verdicts all-gathered via psum —
 the two are bitwise-identical by construction, which the test suite checks
 on 1e5-probe workloads.
 
-Probes route through the plan->gather->combine engine (core/engine.py):
-each shard's point/range verdict is one fused ``state[lanes]`` gather over
-its row with covering-bit loads deduped against the child-word loads, so
-the engine's 4-loads-per-layer access count lands in every bank path.
+Probes route through the plan->gather->combine engine (core/engine.py).
+On the single-device bank they go one step further: the shard rows are a
+stack over one flat lane vector, so ``point``/``range`` probe **all**
+shards at once through the multi-filter stacked plan
+(``core.engine.StackedProbe``) — ONE fused gather for the whole
+(batch x shard) verdict matrix, with the per-shard clipped bounds passed
+as per-row bounds.  The per-shard bodies survive for the ``shard_map``
+variant (each device probes only its resident rows) and stay the bitwise
+reference for both paths.
 """
 from __future__ import annotations
 
@@ -38,7 +43,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
 
-from ..core import BloomRF, basic_layout
+from ..core import BloomRF, basic_layout, stacked_probe
 from ..core.hashing import key_dtype_for
 
 __all__ = ["FilterBank", "ShardedFilterBank"]
@@ -64,6 +69,10 @@ class FilterBank:
                                    max(n_keys // n_shards, 1), bits_per_key,
                                    delta=min(delta, self.d_local), seed=seed)
         self.filter = BloomRF(self.layout)
+        # all shard rows probed at once: one fused gather (core/engine.py)
+        self._stacked = stacked_probe(
+            (self.layout,) * n_shards,
+            tuple(s * self.layout.total_u32 for s in range(n_shards)))
 
     # -- key routing -----------------------------------------------------
     def _route(self, keys):
@@ -127,18 +136,18 @@ class FilterBank:
     def point(self, state, qs):
         low, shard = self._route(qs)
         ids = jnp.arange(self.n_shards, dtype=jnp.uint32)
-        hits = jax.vmap(lambda i, st: self._point_shard(st, i, low, shard)
-                        )(ids, state)
-        return hits.any(axis=0)
+        hits = self._stacked.point_all(state.reshape(-1), low)  # (B, S)
+        return (hits & (shard[:, None] == ids[None, :])).any(axis=1)
 
     @functools.partial(jax.jit, static_argnums=0)
     def range(self, state, lo, hi):
         lo_low, lo_shard = self._route(lo)
         hi_low, hi_shard = self._route(hi)
-        ids = jnp.arange(self.n_shards, dtype=jnp.uint32)
-        hits = jax.vmap(lambda i, st: self._range_shard(
-            st, i, lo_low, lo_shard, hi_low, hi_shard))(ids, state)
-        return hits.any(axis=0)
+        ids = jnp.arange(self.n_shards, dtype=jnp.uint32)[:, None]  # (S, 1)
+        nonempty, llo, lhi = self._clip_to_shard(ids, lo_low, lo_shard,
+                                                 hi_low, hi_shard)  # (S, B)
+        hits = self._stacked.range_all(state.reshape(-1), llo.T, lhi.T)
+        return (hits & nonempty.T).any(axis=1)
 
     def size_bits(self) -> int:
         return self.n_shards * self.layout.total_bits

@@ -43,11 +43,14 @@ is bitwise-identical to the vmapped single-device reference by construction
 — asserted on >= 1e5 mixed point/range probes across an 8-device
 (replica x data) mesh in ``tests/test_tenant_bank.py``.
 
-Main-filter and meta-filter probes both route through the
-plan->gather->combine engine (core/engine.py): the meta-filter AND in
-``range(..., meta)`` is two fused gathers per (tenant, shard) — one over
-the main row, one over the coarse row — with covering-bit loads deduped
-against child-word loads in each.
+Main-filter and meta-filter probes route through the multi-filter stacked
+plan (``core.engine.StackedProbe``): the single-device reference probes
+every (tenant, shard) row — and, for ``range(..., meta)``, every coarse
+meta row too — with ONE fused gather over the flattened row stack, the
+per-shard clipped bounds (and their dyadic-prefix images for the meta
+rows) riding along as per-row bounds.  The per-(tenant, shard) bodies
+survive for the ``shard_map`` variants, which stay bitwise-identical to
+the stacked reference.
 """
 from __future__ import annotations
 
@@ -56,10 +59,11 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
 
-from ..core import BloomRF, basic_layout, dyadic_prefixes
+from ..core import BloomRF, basic_layout, dyadic_prefixes, stacked_probe
 from .filter_bank import FilterBank
 
 __all__ = ["TenantFilterBank", "ShardedTenantFilterBank"]
@@ -96,6 +100,18 @@ class TenantFilterBank:
             d_meta, n_prefixes, meta_bits_per_prefix,
             delta=min(delta, max(d_meta, 1)), seed=seed ^ 0xB100F1)
         self.meta = BloomRF(self.meta_layout)
+        # stacked one-gather probes over all (tenant, shard) rows; the
+        # meta variant appends the coarse rows to the same flat stack
+        R = n_tenants * n_shards
+        U = self.bank.layout.total_u32
+        Um = self.meta_layout.total_u32
+        bases_main = tuple(r * U for r in range(R))
+        self._stacked = stacked_probe((self.bank.layout,) * R, bases_main)
+        self._stacked_meta = stacked_probe(
+            (self.bank.layout,) * R + (self.meta_layout,) * R,
+            bases_main + tuple(R * U + r * Um for r in range(R)))
+        self._row_tenant = jnp.asarray(
+            np.repeat(np.arange(n_tenants), n_shards), jnp.uint32)
 
     # -- per-(tenant, shard) bodies (shared with the shard_map variant) ----
     def _meta_insert_shard(self, meta_row, plow, owned):
@@ -159,44 +175,47 @@ class TenantFilterBank:
         return (self.insert(self.init_state(), tenants, keys),
                 self.insert_meta(self.init_meta(), tenants, keys))
 
+    def _tile_rows(self, x):
+        """(S, B) per-shard values -> (B, T*S) per-row values (row t*S+s
+        carries shard s), matching the stacked probes' row order."""
+        return jnp.tile(x.T, (1, self.n_tenants))
+
     @functools.partial(jax.jit, static_argnums=0)
     def point(self, state, tenants, qs):
         tenants = jnp.asarray(tenants, jnp.uint32)
         low, shard = self.bank._route(qs)
-        t_ids, s_ids = self._ids()
-
-        def per_tenant(t, rows):
-            hits = jax.vmap(lambda s, row: self.bank._point_shard(
-                row, s, low, shard))(s_ids, rows)
-            return hits & (tenants == t)
-
-        return jax.vmap(per_tenant)(t_ids, state).any(axis=(0, 1))
+        s_row = jnp.tile(jnp.arange(self.n_shards, dtype=jnp.uint32),
+                         self.n_tenants)
+        own = ((shard[:, None] == s_row[None, :]) &
+               (tenants[:, None] == self._row_tenant[None, :]))
+        hits = self._stacked.point_all(state.reshape(-1), low)  # (B, T*S)
+        return (hits & own).any(axis=1)
 
     @functools.partial(jax.jit, static_argnums=0)
     def range(self, state, tenants, lo, hi, meta=None):
         tenants = jnp.asarray(tenants, jnp.uint32)
         lo_low, lo_shard = self.bank._route(lo)
         hi_low, hi_shard = self.bank._route(hi)
-        t_ids, s_ids = self._ids()
-
+        s_ids = jnp.arange(self.n_shards, dtype=jnp.uint32)[:, None]
+        nonempty, llo, lhi = self.bank._clip_to_shard(
+            s_ids, lo_low, lo_shard, hi_low, hi_shard)          # (S, B)
+        own = (self._tile_rows(nonempty) &
+               (tenants[:, None] == self._row_tenant[None, :]))
         if meta is None:
-            def per_tenant(t, rows):
-                hits = jax.vmap(lambda s, row: self.bank._range_shard(
-                    row, s, lo_low, lo_shard, hi_low, hi_shard))(s_ids, rows)
-                return hits & (tenants == t)
-
-            hits = jax.vmap(per_tenant)(t_ids, state)
-        else:
-            def per_tenant(t, rows, mrows):
-                hits = jax.vmap(lambda s, row, mrow: self.bank._range_shard(
-                    row, s, lo_low, lo_shard, hi_low, hi_shard)
-                    & self._meta_range_shard(
-                        mrow, s, lo_low, lo_shard, hi_low, hi_shard)
-                    )(s_ids, rows, mrows)
-                return hits & (tenants == t)
-
-            hits = jax.vmap(per_tenant)(t_ids, state, meta)
-        return hits.any(axis=(0, 1))
+            hits = self._stacked.range_all(
+                state.reshape(-1), self._tile_rows(llo), self._tile_rows(lhi))
+            return (hits & own).any(axis=1)
+        # meta rows join the same stack: main & meta in ONE fused gather
+        plo = dyadic_prefixes(llo, self.meta_level, self.bank.d_local)
+        phi = dyadic_prefixes(lhi, self.meta_level, self.bank.d_local)
+        flat = jnp.concatenate([state.reshape(-1), meta.reshape(-1)])
+        lo_all = jnp.concatenate(
+            [self._tile_rows(llo), self._tile_rows(plo)], axis=1)
+        hi_all = jnp.concatenate(
+            [self._tile_rows(lhi), self._tile_rows(phi)], axis=1)
+        hits = self._stacked_meta.range_all(flat, lo_all, hi_all)
+        R = self.n_tenants * self.n_shards
+        return (hits[:, :R] & hits[:, R:] & own).any(axis=1)
 
     @functools.partial(jax.jit, static_argnums=0)
     def meta_skip_stats(self, meta, tenants, lo, hi):

@@ -5,15 +5,20 @@ dispatch wrapper.  Kernels are validated in interpret mode on CPU and target
 TPU VMEM tiling (see DESIGN.md §3 for the hardware adaptation).
 """
 from .insert import insert_resident
-from .ops import FilterOps
-from .probe import point_probe_partitioned, point_probe_resident
-from .rangeprobe import range_probe_partitioned, range_probe_resident
+from .ops import DEFAULT_VMEM_BUDGET_U32, FilterOps
+from .probe import (point_probe_partitioned, point_probe_resident,
+                    point_probe_stacked_resident)
+from .rangeprobe import (range_probe_partitioned, range_probe_resident,
+                         range_probe_stacked_resident)
 
 __all__ = [
     "FilterOps",
+    "DEFAULT_VMEM_BUDGET_U32",
     "point_probe_resident",
     "point_probe_partitioned",
+    "point_probe_stacked_resident",
     "insert_resident",
     "range_probe_resident",
     "range_probe_partitioned",
+    "range_probe_stacked_resident",
 ]

@@ -2,19 +2,35 @@
 
 ``interpret`` defaults to True off-TPU (kernel bodies execute in Python on
 CPU for validation); on a real TPU backend pass ``interpret=False``.
+
+The resident/partitioned dispatch threshold is a config knob (DESIGN.md
+§3): filters of up to ``vmem_budget_u32`` lanes take the VMEM-resident
+kernels, larger ones the block-partitioned kernels.  The default comes
+from the ``BLOOMRF_VMEM_BUDGET_U32`` environment variable (read once at
+import) and falls back to 2^22 lanes = 16 MiB — a comfortable resident
+footprint on a v5e core.  Deployments with other VMEM sizes, or tests
+that want to force the partitioned path, set the env var or pass
+``vmem_budget_u32`` explicitly.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
 
 from ..core import BloomRF, FilterLayout
-from . import probe as _probe
+from ..core.engine import stacked_probe
 from . import insert as _insert
+from . import probe as _probe
 from . import rangeprobe as _rangeprobe
 from .ref import check_kernel_layout
 
-__all__ = ["FilterOps"]
+__all__ = ["FilterOps", "DEFAULT_VMEM_BUDGET_U32"]
+
+#: resident/partitioned threshold in uint32 lanes; env-overridable
+DEFAULT_VMEM_BUDGET_U32 = int(os.environ.get("BLOOMRF_VMEM_BUDGET_U32",
+                                             1 << 22))  # 16 MiB of lanes
 
 
 def _on_tpu() -> bool:
@@ -27,16 +43,22 @@ class FilterOps:
     * small filters (<= ``vmem_budget_u32`` lanes) -> VMEM-resident kernels;
     * large filters -> block-partitioned point AND range probe kernels
       (HBM-scale filters no longer fall back to XLA for range queries);
-    * exact-layer layouts (range) -> XLA engine path (dynamic bounded scan).
+    * exact-layer layouts (range) -> XLA engine path (dynamic bounded scan);
+    * same-layout run *stacks* (``point_stacked``/``range_stacked``) ->
+      the stacked-resident kernel while the whole (R, total_u32) stack fits
+      the VMEM budget, else the XLA stacked-probe path — either way one
+      fused gather per query tile across every run row.
     """
 
     def __init__(self, layout: FilterLayout, interpret: bool | None = None,
-                 vmem_budget_u32: int = 1 << 22):  # 16 MiB of lanes
+                 vmem_budget_u32: int | None = None):
         check_kernel_layout(layout)
         self.layout = layout
         self.filter = BloomRF(layout)
         self.interpret = (not _on_tpu()) if interpret is None else interpret
-        self.resident = layout.total_u32 <= vmem_budget_u32
+        self.vmem_budget_u32 = (DEFAULT_VMEM_BUDGET_U32
+                                if vmem_budget_u32 is None else vmem_budget_u32)
+        self.resident = layout.total_u32 <= self.vmem_budget_u32
 
     # -- build ----------------------------------------------------------
     def init_state(self):
@@ -68,3 +90,34 @@ class FilterOps:
         return _rangeprobe.range_probe_partitioned(self.layout, state, lo,
                                                    hi,
                                                    interpret=self.interpret)
+
+    # -- stacked-run probes (R same-layout rows, one gather per tile) ----
+    def _stacked(self, n_rows: int):
+        u = self.layout.total_u32
+        return stacked_probe((self.layout,) * n_rows,
+                             tuple(r * u for r in range(n_rows)))
+
+    def range_stacked(self, stack, lo, hi):
+        """(B, R) range verdicts over a ``uint32[R, total_u32]`` run stack."""
+        if self.layout.has_exact:
+            lo = jnp.asarray(lo, self.filter.kdtype)
+            hi = jnp.asarray(hi, self.filter.kdtype)
+            return jax.vmap(lambda row: self.filter.range(row, lo, hi),
+                            out_axes=1)(stack)
+        R = stack.shape[0]
+        if R * self.layout.total_u32 <= self.vmem_budget_u32:
+            return _rangeprobe.range_probe_stacked_resident(
+                self.layout, stack, lo, hi, interpret=self.interpret)
+        return self._stacked(R).range_all(stack.reshape(-1), lo, hi)
+
+    def point_stacked(self, stack, keys):
+        """(B, R) point verdicts over a ``uint32[R, total_u32]`` run stack."""
+        if self.layout.has_exact:
+            keys = jnp.asarray(keys, self.filter.kdtype)
+            return jax.vmap(lambda row: self.filter.point(row, keys),
+                            out_axes=1)(stack)
+        R = stack.shape[0]
+        if R * self.layout.total_u32 <= self.vmem_budget_u32:
+            return _probe.point_probe_stacked_resident(
+                self.layout, stack, keys, interpret=self.interpret)
+        return self._stacked(R).point_all(stack.reshape(-1), keys)

@@ -28,11 +28,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core import BloomRF, FilterLayout
+from ..core.engine import stacked_probe
 from .ref import check_kernel_layout
 
 __all__ = [
     "point_probe_resident",
     "point_probe_partitioned",
+    "point_probe_stacked_resident",
     "DEFAULT_TILE",
     "DEFAULT_BLOCK_U32",
 ]
@@ -105,6 +107,47 @@ def point_probe_resident(layout: FilterLayout, state: jax.Array, keys,
         out_shape=jax.ShapeDtypeStruct((Bp,), jnp.bool_),
         interpret=interpret,
     )(keys_p, state)
+    return out[:B]
+
+
+# ---------------------------------------------------------------------------
+# stacked-run variant (LSM run stacks: R same-layout filter rows in VMEM)
+# ---------------------------------------------------------------------------
+
+def _stacked_kernel(keys_ref, state_ref, out_ref, *, probe):
+    out_ref[...] = probe._point_all(state_ref[...].reshape(-1), keys_ref[...])
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4))
+def point_probe_stacked_resident(layout: FilterLayout, stack: jax.Array,
+                                 keys, tile: int = DEFAULT_TILE,
+                                 interpret: bool = True):
+    """Batched point probe over a ``uint32[R, total_u32]`` run stack.
+
+    Each grid step answers one query tile against all R rows at once via
+    the multi-filter stacked plan (``core.engine.StackedProbe`` — one
+    fused gather per tile).  Returns ``bool[B, R]``."""
+    check_kernel_layout(layout)
+    if layout.has_exact:
+        raise ValueError("exact-layer layouts use the XLA path (ops.py)")
+    R = stack.shape[0]
+    probe = stacked_probe((layout,) * R,
+                          tuple(r * layout.total_u32 for r in range(R)))
+    keys = jnp.asarray(keys, jnp.uint32)
+    B = keys.shape[0]
+    Bp = _round_up(max(B, 1), tile)
+    keys_p = jnp.pad(keys, (0, Bp - B))
+    out = pl.pallas_call(
+        functools.partial(_stacked_kernel, probe=probe),
+        grid=(Bp // tile,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda t: (t,)),
+            pl.BlockSpec((R, layout.total_u32), lambda t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, R), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, R), jnp.bool_),
+        interpret=interpret,
+    )(keys_p, stack)
     return out[:B]
 
 

@@ -34,10 +34,12 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core import BloomRF, FilterLayout
+from ..core.engine import stacked_probe
 from .probe import DEFAULT_BLOCK_U32, _bucket_probes
 from .ref import check_kernel_layout
 
-__all__ = ["range_probe_resident", "range_probe_partitioned"]
+__all__ = ["range_probe_resident", "range_probe_partitioned",
+           "range_probe_stacked_resident"]
 
 DEFAULT_TILE = 512
 
@@ -86,6 +88,53 @@ def range_probe_resident(layout: FilterLayout, state: jax.Array, lo, hi,
         out_shape=jax.ShapeDtypeStruct((Bp,), jnp.bool_),
         interpret=interpret,
     )(lo_p, hi_p, state)
+    return out[:B]
+
+
+# ---------------------------------------------------------------------------
+# stacked-run variant (LSM run stacks: R same-layout filter rows in VMEM)
+# ---------------------------------------------------------------------------
+
+def _range_stacked_kernel(lo_ref, hi_ref, state_ref, out_ref, *, probe):
+    # the StackedProbe's one fused gather, traced over the query tile:
+    # verdicts for every run row of the tile in a single (tile, R*A) load
+    out_ref[...] = probe._range_all(state_ref[...].reshape(-1),
+                                    lo_ref[...], hi_ref[...])
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4, 5))
+def range_probe_stacked_resident(layout: FilterLayout, stack: jax.Array,
+                                 lo, hi, tile: int = DEFAULT_TILE,
+                                 interpret: bool = True):
+    """Batched range probe over a stack of R same-layout filter rows.
+
+    ``stack`` is ``uint32[R, total_u32]`` (one row per LSM run / tenant);
+    the whole stack is pinned in VMEM and each grid step answers one query
+    tile against **all** rows at once through the multi-filter stacked plan
+    (``core.engine.StackedProbe`` — one fused gather per tile).  Returns
+    ``bool[B, R]``."""
+    _check_range_kernel_layout(layout)
+    R = stack.shape[0]
+    probe = stacked_probe((layout,) * R,
+                          tuple(r * layout.total_u32 for r in range(R)))
+    lo = jnp.asarray(lo, jnp.uint32)
+    hi = jnp.asarray(hi, jnp.uint32)
+    B = lo.shape[0]
+    Bp = _round_up(max(B, 1), tile)
+    lo_p = jnp.pad(lo, (0, Bp - B))
+    hi_p = jnp.pad(hi, (0, Bp - B))
+    out = pl.pallas_call(
+        functools.partial(_range_stacked_kernel, probe=probe),
+        grid=(Bp // tile,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda t: (t,)),
+            pl.BlockSpec((tile,), lambda t: (t,)),
+            pl.BlockSpec((R, layout.total_u32), lambda t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, R), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, R), jnp.bool_),
+        interpret=interpret,
+    )(lo_p, hi_p, stack)
     return out[:B]
 
 

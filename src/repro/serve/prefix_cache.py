@@ -28,6 +28,14 @@ extra map probe (counted in stats).  All filter probes (point lookups,
 session ranges, eviction sweeps, and the meta AND) route through the
 plan->gather->combine engine (core/engine.py), so each segment consult is
 a single fused gather over the tenant's filter row.
+
+Optionally the index is backed by an LSM :class:`~repro.store.Store`
+(``backing_store=``): frozen entries are mirrored into the store as the
+cold tier, total-miss lookups fall through to ``store.get``, and
+:meth:`evict_window` sweeps a session-id window — candidate segments found
+through the range filters, evicted keys tombstoned in the store so the
+cold tier masks them too (the store's own per-run filters keep the sweep's
+read amplification bounded).
 """
 from __future__ import annotations
 
@@ -37,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..dist.tenant_bank import TenantFilterBank
+from ..store import Store
 
 __all__ = ["PrefixCacheIndex", "pack_key"]
 
@@ -58,7 +67,8 @@ class _Segment:
 
 
 class PrefixCacheIndex:
-    def __init__(self, bits_per_key: float = 14.0, n_tenants: int = 16):
+    def __init__(self, bits_per_key: float = 14.0, n_tenants: int = 16,
+                 backing_store: Optional[Store] = None):
         if n_tenants < 1 or n_tenants & (n_tenants - 1):
             raise ValueError(
                 f"n_tenants must be a power of two, got {n_tenants}")
@@ -73,7 +83,26 @@ class PrefixCacheIndex:
         self.segments: List[_Segment] = []
         self._banks: Dict[int, TenantFilterBank] = {}
         self.stats = {"filter_probes": 0, "filter_hits": 0,
-                      "map_probes": 0, "map_hits": 0, "range_probes": 0}
+                      "map_probes": 0, "map_hits": 0, "range_probes": 0,
+                      "store_probes": 0, "store_hits": 0, "evicted": 0}
+        self.store: Optional[Store] = None
+        if backing_store is not None:
+            self.attach_store(backing_store)
+
+    def attach_store(self, store: Store) -> None:
+        """Use an LSM run-store as the cold tier behind the segments.
+
+        Segments frozen before attachment are backfilled, so the cold
+        tier always mirrors every frozen entry — ``lookup``'s fallthrough
+        and ``evict_window``'s cold sweep rely on that invariant."""
+        if store.cfg.d < _SES_BITS + _CHUNK_BITS:
+            raise ValueError(
+                f"backing store needs a >= {_SES_BITS + _CHUNK_BITS}-bit "
+                f"domain for packed keys, got d={store.cfg.d}")
+        self.store = store
+        for seg in self.segments:
+            for k, pages in seg.entries.items():
+                store.put(k, pages)
 
     # -- session-namespace routing (scalar ints and numpy arrays alike) --
     def _tenant(self, session):
@@ -106,6 +135,9 @@ class PrefixCacheIndex:
         local = self._local_key(sessions, chunks).astype(np.uint32)
         self.segments.append(_Segment(entries, self._bank_for(len(packed)),
                                       tenants, local))
+        if self.store is not None:           # mirror into the cold tier
+            for k, pages in entries.items():
+                self.store.put(k, pages)
         return len(self.segments) - 1
 
     def lookup(self, session: int, chunk: int) -> Optional[List[int]]:
@@ -121,6 +153,12 @@ class PrefixCacheIndex:
                 if key in seg.entries:
                     self.stats["map_hits"] += 1
                     return seg.entries[key]
+        if self.store is not None:           # cold tier (evictions masked
+            self.stats["store_probes"] += 1  # there by tombstones)
+            pages = self.store.get(key)
+            if pages is not None:
+                self.stats["store_hits"] += 1
+                return pages
         return None
 
     def session_segments(self, session: int) -> List[int]:
@@ -173,6 +211,36 @@ class PrefixCacheIndex:
                     seg.bank.range(seg.state, t, lo, hi, seg.meta)).any()):
                 out.append(i)
         return out
+
+    def evict_window(self, lo_session: int, hi_session: int) -> int:
+        """Evict every cached prefix whose session id is in the window.
+
+        The range filters narrow the sweep to candidate segments
+        (:meth:`eviction_candidates`); matching entries are dropped from
+        those segments' maps.  When a backing store is attached, the cold
+        tier is swept too: a session window is one contiguous range of
+        packed keys, so a single (filter-pruned) ``store.scan`` finds
+        every cold entry in the window and tombstones it.  Segment
+        filters are immutable (insert-only), so an evicted key degrades
+        to one filter false positive until the segment is rebuilt;
+        correctness never depends on clearing bits."""
+        dropped = set()
+        for i in self.eviction_candidates(lo_session, hi_session):
+            seg = self.segments[i]
+            drop = [k for k in seg.entries
+                    if lo_session <= (k >> _CHUNK_BITS) <= hi_session]
+            for k in drop:
+                del seg.entries[k]
+            dropped.update(drop)
+        if self.store is not None:
+            chunk_full = (1 << _CHUNK_BITS) - 1
+            for k, _ in self.store.scan(lo_session << _CHUNK_BITS,
+                                        (hi_session << _CHUNK_BITS)
+                                        | chunk_full):
+                self.store.delete(k)
+                dropped.add(k)
+        self.stats["evicted"] += len(dropped)
+        return len(dropped)
 
     def false_positive_rate(self) -> float:
         fp = self.stats["map_probes"] - self.stats["map_hits"]

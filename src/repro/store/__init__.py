@@ -1,0 +1,26 @@
+"""LSM run-store with per-run bloomRF filter blocks (DESIGN.md §10).
+
+The paper's headline evaluation embeds bloomRF into RocksDB, where a
+per-SSTable filter prunes point- and range-reads before any data-block I/O.
+This package reproduces that workload standalone: a mutable
+:class:`Memtable` flushes into immutable sorted :class:`Run`s, each carrying
+a bloomRF filter block plus min/max fences; leveled compaction merges runs
+and merges/rebuilds their filter state; and the read path batch-probes all
+live runs' filters with ONE fused gather over the stacked state
+(``core.engine.StackedProbe``) before touching any run's data.
+"""
+from .compaction import merge_filter_state, merge_sorted_runs
+from .memtable import TOMBSTONE, Memtable
+from .run import Run
+from .store import Store, StoreConfig, StoreStats
+
+__all__ = [
+    "Memtable",
+    "TOMBSTONE",
+    "Run",
+    "Store",
+    "StoreConfig",
+    "StoreStats",
+    "merge_sorted_runs",
+    "merge_filter_state",
+]

@@ -1,0 +1,79 @@
+"""Leveled compaction: run merging and filter-state merging.
+
+Two invariants carry the whole subsystem (DESIGN.md §10):
+
+* **Entry merge** — runs are merged newest-first; for every key only the
+  newest occurrence survives (last-write-wins), and tombstones survive as
+  markers unless the merge target is the store's bottom level (nothing
+  older left to mask — the marker is garbage-collected).
+
+* **Filter merge** — bloomRF state is a union-closed bitmap: the filter of
+  ``A ∪ B`` built under one layout is exactly ``state_A | state_B`` (insert
+  only ever ORs bits, and every probe reads through the same position
+  functions).  So same-layout merges are a single ``jnp.bitwise_or`` — no
+  hashing, no key replay.  Cross-layout merges (the merged run graduates to
+  a larger capacity class) re-insert the surviving keys through the kernels
+  insert path.  Either way the merged filter covers a *superset* of the
+  surviving keys (shadowed duplicates and dropped tombstones stay set), so
+  the no-false-negative guarantee is preserved by construction; the
+  property suite checks this against a bulk rebuild over the union.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import FilterLayout
+from .run import Run
+
+__all__ = ["merge_sorted_runs", "merge_filter_state"]
+
+
+def merge_sorted_runs(runs: List[Run], drop_tombstones: bool = False
+                      ) -> Tuple[np.ndarray, list, np.ndarray]:
+    """Merge runs given newest-first into (keys, vals, tombs), keys sorted.
+
+    For duplicate keys the newest occurrence wins.  With
+    ``drop_tombstones`` the surviving tombstone entries are removed
+    entirely (bottom-level merges only)."""
+    if not runs:
+        raise ValueError("nothing to merge")
+    all_keys = np.concatenate([r.keys for r in runs])
+    prec = np.concatenate([np.full(len(r.keys), i, np.int64)
+                           for i, r in enumerate(runs)])
+    # stable pick of the newest occurrence per key: sort by (key, precedence)
+    order = np.lexsort((prec, all_keys))
+    ks = all_keys[order]
+    first = np.concatenate([[True], ks[1:] != ks[:-1]])
+    sel = order[first]
+    keys = all_keys[sel]
+    all_tombs = np.concatenate([r.tombs for r in runs])
+    tombs = all_tombs[sel]
+    flat_vals: list = []
+    for r in runs:
+        flat_vals.extend(r.vals)
+    if drop_tombstones:
+        keep = ~tombs
+        keys, tombs, sel = keys[keep], tombs[keep], sel[keep]
+    vals = [flat_vals[i] for i in sel]
+    return keys, vals, tombs
+
+
+def merge_filter_state(runs: List[Run], target_layout: FilterLayout,
+                       keys: np.ndarray,
+                       build: Callable[[FilterLayout, np.ndarray], jnp.ndarray]
+                       ) -> Tuple[jnp.ndarray, bool]:
+    """Merged filter block for ``runs`` under ``target_layout``.
+
+    Returns ``(state, merged_via_or)``.  When every source run already uses
+    ``target_layout`` (same capacity class, same seeds) the union filter is
+    the bitwise OR of the source states; otherwise the surviving ``keys``
+    are re-inserted through ``build`` (the kernels insert path)."""
+    if all(r.layout == target_layout and r.state is not None for r in runs):
+        state = runs[0].state
+        for r in runs[1:]:
+            state = jnp.bitwise_or(state, r.state)
+        return state, True
+    return build(target_layout, keys), False

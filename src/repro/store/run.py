@@ -1,0 +1,120 @@
+"""Immutable sorted runs (the store's SSTables).
+
+A run is the unit the filters prune: sorted unique keys, their values,
+a tombstone mask (deletes flushed as markers), min/max key fences, and a
+bloomRF filter block over *all* entry keys — tombstones included, so a
+newer run's delete marker is discoverable through its filter and masks
+older runs on the read path.
+
+Runs snapshot via ``dist/compression.py``: both the key list and the
+filter's set-bit positions are sorted integer lists, so the on-disk form
+is two Elias-Fano posting lists (``n * (2 + log2(u/n))`` bits each)
+instead of raw ``u32`` dumps — :meth:`Run.pack` / :meth:`Run.unpack`
+round-trip bit-exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import FilterLayout
+from ..dist.compression import (elias_fano_decode, elias_fano_encode,
+                                pack_filter_state, unpack_filter_state)
+
+__all__ = ["Run"]
+
+_SNAPSHOT_SCHEMA = "bloomrf-run/v1"
+
+
+class Run:
+    """One immutable sorted run with its filter block and fences."""
+
+    __slots__ = ("keys", "vals", "tombs", "level", "layout", "state", "alt")
+
+    def __init__(self, keys: np.ndarray, vals: list, tombs: np.ndarray,
+                 level: int, layout: FilterLayout,
+                 state: Optional[jax.Array], alt=None):
+        keys = np.asarray(keys, np.uint64)
+        if keys.ndim != 1 or len(keys) == 0:
+            raise ValueError("a run needs a non-empty 1-D key vector")
+        if (keys[1:] <= keys[:-1]).any():
+            raise ValueError("run keys must be strictly increasing")
+        if len(vals) != len(keys) or len(tombs) != len(keys):
+            raise ValueError("keys/vals/tombs length mismatch")
+        self.keys = keys
+        self.vals = vals
+        self.tombs = np.asarray(tombs, bool)
+        self.level = level
+        self.layout = layout
+        self.state = state            # uint32[layout.total_u32] filter block
+        self.alt = alt                # optional baseline PointRangeFilter
+
+    # -- fences ----------------------------------------------------------
+    @property
+    def kmin(self) -> int:
+        return int(self.keys[0])
+
+    @property
+    def kmax(self) -> int:
+        return int(self.keys[-1])
+
+    def __len__(self) -> int:
+        return len(self.keys)
+
+    @property
+    def n_live(self) -> int:
+        return int((~self.tombs).sum())
+
+    def data_bytes(self, value_bytes: int = 64) -> int:
+        """Accounting size of the run's data blocks (not the filter)."""
+        return len(self.keys) * (8 + value_bytes)
+
+    # -- data-block reads (the part the filters try to avoid) ------------
+    def lookup(self, key: int) -> Tuple[bool, object, bool]:
+        """(found, value, is_tombstone) via binary search."""
+        i = int(np.searchsorted(self.keys, np.uint64(key)))
+        if i < len(self.keys) and self.keys[i] == np.uint64(key):
+            return True, self.vals[i], bool(self.tombs[i])
+        return False, None, False
+
+    def slice(self, lo: int, hi: int) -> Tuple[np.ndarray, list, np.ndarray]:
+        """Entries with lo <= key <= hi (inclusive bounds, like Store.scan)."""
+        a, b = np.searchsorted(self.keys, [np.uint64(lo), np.uint64(hi)])
+        if b < len(self.keys) and self.keys[b] == np.uint64(hi):
+            b += 1
+        return self.keys[a:b], self.vals[a:b], self.tombs[a:b]
+
+    # -- snapshots (Elias-Fano, dist/compression.py) ---------------------
+    def pack(self) -> dict:
+        """Compressed snapshot: EF posting lists for keys + filter bits."""
+        enc = {
+            "schema": _SNAPSHOT_SCHEMA,
+            "level": self.level,
+            "layout": dataclasses.asdict(self.layout),
+            "keys": elias_fano_encode(self.keys, universe=1 << 64),
+            "vals": list(self.vals),
+            "tombs": np.packbits(self.tombs),
+            "n": len(self.keys),
+        }
+        if self.state is not None:
+            enc["filter"] = pack_filter_state(np.asarray(self.state))
+        return enc
+
+    @classmethod
+    def unpack(cls, enc: dict, alt=None) -> "Run":
+        if enc.get("schema") != _SNAPSHOT_SCHEMA:
+            raise ValueError(f"not a run snapshot: {enc.get('schema')!r}")
+        layout = FilterLayout(**enc["layout"])
+        n = enc["n"]
+        keys = elias_fano_decode(enc["keys"])
+        tombs = np.unpackbits(enc["tombs"])[:n].astype(bool)
+        state = None
+        if "filter" in enc:
+            state = jnp.asarray(
+                unpack_filter_state(enc["filter"], layout.total_u32))
+        return cls(keys, list(enc["vals"]), tombs, enc["level"], layout,
+                   state, alt=alt)

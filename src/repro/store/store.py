@@ -1,0 +1,453 @@
+"""The LSM run-store: memtable + leveled runs + one-gather filter probes.
+
+Write path: ``put``/``delete`` land in the memtable; at
+``memtable_limit`` entries the memtable flushes to an immutable level-0
+:class:`~repro.store.run.Run` carrying a bloomRF filter block (layout
+chosen from a capacity-class ladder) and min/max fences.  When level 0
+exceeds ``level0_runs`` runs, leveled compaction merges them (plus the
+next level's run) downward — same-class filter blocks merge with a single
+``bitwise_or``, class-graduating merges re-insert through the kernels
+insert path (``compaction.merge_filter_state``).
+
+Read path: ``get``/``scan`` first consult the memtable, then probe **all**
+live runs' filters at once — the per-run states are concatenated into one
+flat lane vector and probed through ``core.engine.StackedProbe``, so a
+scan over R runs costs exactly ONE fused gather over the stacked filter
+state regardless of R or the mix of capacity classes (jaxpr-asserted in
+the test suite).  Only runs whose fences overlap *and* whose filter says
+"maybe" have their data blocks touched; :class:`StoreStats` counts what
+the filters saved (skips, false-positive reads, bytes not read).
+
+Filters are insert-only: a delete writes a tombstone *entry* whose key is
+inserted like any other, so newer tombstones are discoverable through the
+filters and mask older runs at read time; no filter bit is ever cleared.
+
+``filter_backend`` swaps the per-run filter: ``"bloomrf"`` (stacked
+one-gather probes), ``"none"`` (min/max fences only — the pruning
+baseline), or any of the host-side baselines from ``repro.filters``
+(``"bloom"``, ``"prefix_bloom"``, ``"rosetta"``, ``"surf"``) for
+side-by-side comparisons in ``benchmarks/store_bench.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import basic_layout, key_dtype_for
+from ..core.engine import _filter_for_layout, stacked_probe
+from ..kernels import FilterOps
+from .compaction import merge_filter_state, merge_sorted_runs
+from .memtable import TOMBSTONE, Memtable
+from .run import Run
+
+__all__ = ["Store", "StoreConfig", "StoreStats"]
+
+
+def _baseline_factory(name: str):
+    from .. import filters as F
+
+    return {
+        "bloom": lambda bpk: F.BloomFilter(bits_per_key=bpk),
+        "prefix_bloom": lambda bpk: F.PrefixBloomFilter(bits_per_key=bpk),
+        "rosetta": lambda bpk: F.Rosetta(bits_per_key=bpk),
+        "surf": lambda bpk: F.SuRFLite(),
+    }[name]
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreConfig:
+    d: int = 32                     # key-domain bits
+    memtable_limit: int = 4096      # entries per flush (= capacity class 0)
+    bits_per_key: float = 14.0
+    delta: int = 6
+    fanout: int = 4                 # capacity-class / level size ratio
+    level0_runs: int = 4            # level-0 run count that triggers compaction
+    filter_backend: str = "bloomrf"  # "bloomrf" | "none" | repro.filters name
+    use_insert_kernels: bool = False  # route rebuilds through FilterOps.insert
+    value_bytes: int = 64           # per-entry data-block size for accounting
+    seed: int = 0x0B100F11
+
+    def __post_init__(self):
+        if self.memtable_limit < 1 or self.fanout < 2 or self.level0_runs < 1:
+            raise ValueError("memtable_limit >= 1, fanout >= 2, "
+                             "level0_runs >= 1 required")
+        if self.filter_backend not in ("bloomrf", "none"):
+            _baseline_factory(self.filter_backend)  # raises on unknown name
+
+
+@dataclasses.dataclass
+class StoreStats:
+    """Counters for what the filter blocks saved on the read path."""
+
+    puts: int = 0
+    deletes: int = 0
+    gets: int = 0
+    scans: int = 0
+    flushes: int = 0
+    compactions: int = 0
+    or_merges: int = 0              # same-layout filter merges (bitwise OR)
+    rebuild_merges: int = 0         # cross-layout merges (key re-insert)
+    # point reads
+    get_runs_considered: int = 0
+    get_fence_skips: int = 0
+    get_filter_skips: int = 0
+    get_run_reads: int = 0
+    get_fp_reads: int = 0           # run read, key absent
+    # scans
+    scan_runs_considered: int = 0
+    scan_fence_skips: int = 0
+    scan_filter_skips: int = 0
+    scan_runs_touched: int = 0
+    scan_fp_reads: int = 0          # run touched, empty slice
+    # data-block bytes
+    bytes_read: int = 0
+    bytes_not_read: int = 0         # skipped runs' data bytes
+
+    @property
+    def runs_probed_per_scan(self) -> float:
+        return self.scan_runs_touched / max(self.scans, 1)
+
+    @property
+    def scan_fp_read_rate(self) -> float:
+        return self.scan_fp_reads / max(self.scan_runs_touched, 1)
+
+    @property
+    def get_fp_read_rate(self) -> float:
+        return self.get_fp_reads / max(self.get_run_reads, 1)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["runs_probed_per_scan"] = self.runs_probed_per_scan
+        d["scan_fp_read_rate"] = self.scan_fp_read_rate
+        d["get_fp_read_rate"] = self.get_fp_read_rate
+        return d
+
+
+class Store:
+    """LSM key-value store with per-run bloomRF filter blocks."""
+
+    def __init__(self, config: Optional[StoreConfig] = None, **kw):
+        self.cfg = config if config is not None else StoreConfig(**kw)
+        self.kdtype = key_dtype_for(self.cfg.d)
+        self.mem = Memtable()
+        self.levels: List[List[Run]] = [[]]   # levels[0] newest-first
+        self.stats = StoreStats()
+        self._ops: dict = {}                  # FilterOps per layout
+        self._runs: List[Run] = []
+        self._flat = None                     # stacked filter lanes
+        self._probe = None
+        self._dirty = True
+
+    # ------------------------------------------------------------------
+    # capacity classes and filter construction
+    # ------------------------------------------------------------------
+    def class_capacity(self, cls: int) -> int:
+        return self.cfg.memtable_limit * self.cfg.fanout ** cls
+
+    def class_layout(self, n_keys: int):
+        """Layout of the smallest capacity class that fits ``n_keys``."""
+        cls = 0
+        while self.class_capacity(cls) < n_keys:
+            cls += 1
+        return basic_layout(self.cfg.d, self.class_capacity(cls),
+                            self.cfg.bits_per_key,
+                            delta=min(self.cfg.delta, self.cfg.d),
+                            seed=self.cfg.seed)
+
+    def _build_filter(self, layout, keys: np.ndarray) -> jnp.ndarray:
+        """Bulk filter build; the compaction rebuild path lands here too."""
+        kj = jnp.asarray(keys, self.kdtype)
+        if self.cfg.use_insert_kernels and layout.d <= 32:
+            if layout not in self._ops:
+                self._ops[layout] = FilterOps(layout)
+            ops = self._ops[layout]
+            return ops.insert(ops.init_state(), kj)
+        return _filter_for_layout(layout).build(kj)
+
+    def _make_run(self, keys: np.ndarray, vals: list, tombs: np.ndarray,
+                  level: int) -> Run:
+        layout = self.class_layout(len(keys))
+        state = alt = None
+        if self.cfg.filter_backend == "bloomrf":
+            state = self._build_filter(layout, keys)
+        elif self.cfg.filter_backend != "none":
+            alt = _baseline_factory(self.cfg.filter_backend)(
+                self.cfg.bits_per_key)
+            alt.build(keys)
+        return Run(keys, vals, tombs, level, layout, state, alt=alt)
+
+    # ------------------------------------------------------------------
+    # write path
+    # ------------------------------------------------------------------
+    def _check_key(self, key: int) -> int:
+        key = int(key)
+        if not (0 <= key < (1 << self.cfg.d)):
+            raise ValueError(f"key {key} outside the {self.cfg.d}-bit domain")
+        return key
+
+    def put(self, key: int, value) -> None:
+        self.mem.put(self._check_key(key), value)
+        self.stats.puts += 1
+        if len(self.mem) >= self.cfg.memtable_limit:
+            self.flush()
+
+    def delete(self, key: int) -> None:
+        self.mem.delete(self._check_key(key))
+        self.stats.deletes += 1
+        if len(self.mem) >= self.cfg.memtable_limit:
+            self.flush()
+
+    def flush(self) -> None:
+        """Freeze the memtable into a new level-0 run."""
+        if len(self.mem) == 0:
+            return
+        keys, vals, tombs = self.mem.sorted_entries()
+        self.levels[0].insert(0, self._make_run(keys, vals, tombs, 0))
+        self.mem.clear()
+        self.stats.flushes += 1
+        self._dirty = True
+        self._maybe_compact()
+
+    # ------------------------------------------------------------------
+    # compaction
+    # ------------------------------------------------------------------
+    def _maybe_compact(self) -> None:
+        if len(self.levels[0]) > self.cfg.level0_runs:
+            self.compact(0)
+        lvl = 1
+        while lvl < len(self.levels):
+            runs = self.levels[lvl]
+            if runs and len(runs[0]) > self.class_capacity(lvl):
+                self.compact(lvl)
+            lvl += 1
+
+    def compact(self, level: int) -> None:
+        """Merge every run at ``level`` (plus the next level's run) down."""
+        if level >= len(self.levels) or not self.levels[level]:
+            return
+        if level + 1 >= len(self.levels):
+            self.levels.append([])
+        sources = self.levels[level] + self.levels[level + 1]
+        bottom = not any(self.levels[lv] for lv in
+                         range(level + 2, len(self.levels)))
+        keys, vals, tombs = merge_sorted_runs(sources,
+                                              drop_tombstones=bottom)
+        self.levels[level] = []
+        if len(keys) == 0:          # everything tombstoned away
+            self.levels[level + 1] = []
+            self.stats.compactions += 1
+            self._dirty = True
+            return
+        target_layout = self.class_layout(len(keys))
+        state = alt = None
+        if self.cfg.filter_backend == "bloomrf":
+            state, via_or = merge_filter_state(
+                sources, target_layout, keys, self._build_filter)
+            if via_or:
+                self.stats.or_merges += 1
+            else:
+                self.stats.rebuild_merges += 1
+        elif self.cfg.filter_backend != "none":
+            alt = _baseline_factory(self.cfg.filter_backend)(
+                self.cfg.bits_per_key)
+            alt.build(keys)
+            self.stats.rebuild_merges += 1
+        self.levels[level + 1] = [
+            Run(keys, vals, tombs, level + 1, target_layout, state, alt=alt)]
+        self.stats.compactions += 1
+        self._dirty = True
+
+    # ------------------------------------------------------------------
+    # stacked filter probes (the one-gather read path)
+    # ------------------------------------------------------------------
+    def live_runs(self) -> List[Run]:
+        """All runs, newest precedence first (L0 newest-first, then down)."""
+        self._refresh()
+        return self._runs
+
+    def _refresh(self) -> None:
+        if not self._dirty:
+            return
+        self._runs = [r for lvl in self.levels for r in lvl]
+        self._flat = self._probe = None
+        if self._runs and self.cfg.filter_backend == "bloomrf":
+            states = [r.state for r in self._runs]
+            self._flat = (states[0] if len(states) == 1
+                          else jnp.concatenate(states))
+            sizes = [r.layout.total_u32 for r in self._runs]
+            bases = tuple(int(b) for b in
+                          np.cumsum([0] + sizes[:-1], dtype=np.int64))
+            self._probe = stacked_probe(
+                tuple(r.layout for r in self._runs), bases)
+        self._dirty = False
+
+    def _fence_mask(self, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+        """(B, R) bool: query interval overlaps the run's [kmin, kmax]."""
+        kmins = np.asarray([r.kmin for r in self._runs], np.uint64)
+        kmaxs = np.asarray([r.kmax for r in self._runs], np.uint64)
+        return (hi[:, None] >= kmins[None, :]) & (lo[:, None] <= kmaxs[None, :])
+
+    def _filter_mask(self, lo: np.ndarray, hi: np.ndarray,
+                     point: bool) -> np.ndarray:
+        """(B, R) bool filter verdicts (True = run may hold a match)."""
+        if self.cfg.filter_backend == "none":
+            return np.ones((len(lo), len(self._runs)), bool)
+        if self.cfg.filter_backend == "bloomrf":
+            if point:
+                v = self._probe.point_all(self._flat,
+                                          jnp.asarray(lo, self.kdtype))
+            else:
+                v = self._probe.range_all(self._flat,
+                                          jnp.asarray(lo, self.kdtype),
+                                          jnp.asarray(hi, self.kdtype))
+            return np.asarray(v)
+        cols = [r.alt.point(lo) if point else r.alt.range(lo, hi)
+                for r in self._runs]
+        return np.stack(cols, axis=1)
+
+    def probe_runs(self, lo, hi, point: bool = False
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """Batched pruning verdicts over all live runs.
+
+        Returns ``(fence, filt)``, each (B, R) bool — the fence overlap
+        mask and the filter verdicts.  A run is touched only where both
+        are True.  One fused gather for the whole batch x run matrix when
+        the backend is bloomRF."""
+        self._refresh()
+        lo = np.atleast_1d(np.asarray(lo, np.uint64))
+        hi = lo if point else np.atleast_1d(np.asarray(hi, np.uint64))
+        if not self._runs:
+            z = np.zeros((len(lo), 0), bool)
+            return z, z
+        fence = self._fence_mask(lo, hi)
+        # Filter probes run in the filter's d-bit dtype: clamp bounds into
+        # the domain first, or an out-of-domain `hi` would wrap under the
+        # dtype cast and the (min/max-normalised) probe would answer the
+        # wrong interval — a false negative the fences don't catch.  The
+        # clamped interval is exactly `query ∩ domain`; queries entirely
+        # above the domain are already fenced off (kmax <= dmax < lo).
+        dmax = np.uint64((1 << self.cfg.d) - 1)
+        filt = self._filter_mask(np.minimum(lo, dmax), np.minimum(hi, dmax),
+                                 point)
+        return fence, filt
+
+    # ------------------------------------------------------------------
+    # read path
+    # ------------------------------------------------------------------
+    def get(self, key: int):
+        """Point lookup; None when absent or deleted."""
+        return self.get_many(np.asarray([self._check_key(key)], np.uint64))[0]
+
+    def get_many(self, keys) -> list:
+        """Batched point lookups: one fused filter gather for the batch."""
+        keys = np.atleast_1d(np.asarray(keys, np.uint64))
+        st = self.stats
+        st.gets += len(keys)
+        fence, filt = self.probe_runs(keys, keys, point=True)
+        out = []
+        for b, key in enumerate(keys):
+            found, v = self.mem.get(int(key))
+            if found:
+                out.append(None if v is TOMBSTONE else v)
+                continue
+            result = None
+            R = len(self._runs)
+            st.get_runs_considered += R
+            st.get_fence_skips += int((~fence[b]).sum())
+            st.get_filter_skips += int((fence[b] & ~filt[b]).sum())
+            for r_idx in np.flatnonzero(fence[b] & filt[b]):
+                run = self._runs[r_idx]
+                st.get_run_reads += 1
+                st.bytes_read += run.data_bytes(self.cfg.value_bytes)
+                hit, val, tomb = run.lookup(int(key))
+                if hit:
+                    result = None if tomb else val
+                    break
+                st.get_fp_reads += 1
+            out.append(result)
+        return out
+
+    def scan(self, lo: int, hi: int) -> list:
+        """All live (key, value) pairs with lo <= key <= hi, ascending."""
+        return self.scan_many([lo], [hi])[0]
+
+    def scan_many(self, los, his) -> list:
+        """Batched scans: one fused filter gather for the whole batch."""
+        los = np.atleast_1d(np.asarray(los, np.uint64))
+        his = np.atleast_1d(np.asarray(his, np.uint64))
+        fence, filt = self.probe_runs(los, his, point=False)
+        return [self._scan_one(int(lo), int(hi), fence[b], filt[b])
+                for b, (lo, hi) in enumerate(zip(los, his))]
+
+    def _scan_one(self, lo: int, hi: int, fence: np.ndarray,
+                  filt: np.ndarray) -> list:
+        st = self.stats
+        st.scans += 1
+        seen = set()
+        out = {}
+        for k, v in self.mem.items():
+            if lo <= k <= hi:
+                seen.add(k)
+                if v is not TOMBSTONE:
+                    out[k] = v
+        R = len(self._runs)
+        st.scan_runs_considered += R
+        st.scan_fence_skips += int((~fence).sum())
+        st.scan_filter_skips += int((fence & ~filt).sum())
+        for r_idx, run in enumerate(self._runs):
+            if not (fence[r_idx] and filt[r_idx]):
+                st.bytes_not_read += run.data_bytes(self.cfg.value_bytes)
+                continue
+            st.scan_runs_touched += 1
+            st.bytes_read += run.data_bytes(self.cfg.value_bytes)
+            ks, vs, tbs = run.slice(lo, hi)
+            if len(ks) == 0:
+                st.scan_fp_reads += 1
+                continue
+            for k, v, t in zip(ks, vs, tbs):
+                k = int(k)
+                if k in seen:
+                    continue        # masked by a newer source
+                seen.add(k)
+                if not t:
+                    out[k] = v
+        return sorted(out.items())
+
+    # ------------------------------------------------------------------
+    # introspection / snapshots
+    # ------------------------------------------------------------------
+    @property
+    def n_runs(self) -> int:
+        return sum(len(lvl) for lvl in self.levels)
+
+    def filter_bits(self) -> int:
+        return sum(r.layout.total_bits for r in self.live_runs()
+                   if r.state is not None)
+
+    def snapshot(self) -> dict:
+        """Compressed snapshot of every frozen run (memtable excluded —
+        flush first for a full-state snapshot)."""
+        return {"schema": "bloomrf-store/v1",
+                "config": dataclasses.asdict(self.cfg),
+                "levels": [[r.pack() for r in lvl] for lvl in self.levels]}
+
+    @classmethod
+    def restore(cls, snap: dict) -> "Store":
+        if snap.get("schema") != "bloomrf-store/v1":
+            raise ValueError(f"not a store snapshot: {snap.get('schema')!r}")
+        store = cls(StoreConfig(**snap["config"]))
+        store.levels = [[Run.unpack(enc) for enc in lvl]
+                        for lvl in snap["levels"]]
+        if not store.levels:
+            store.levels = [[]]
+        if store.cfg.filter_backend not in ("bloomrf", "none"):
+            for lvl in store.levels:     # baselines don't snapshot: rebuild
+                for r in lvl:
+                    r.alt = _baseline_factory(store.cfg.filter_backend)(
+                        store.cfg.bits_per_key)
+                    r.alt.build(r.keys)
+        store._dirty = True
+        return store

@@ -293,6 +293,129 @@ def test_insert_has_no_total_bits_transient():
     assert not offenders, offenders
 
 
+# ---------------------------------------------------------------------------
+# multi-filter stacked plan (StackedProbe): R rows, one gather
+# ---------------------------------------------------------------------------
+
+def _stack_case(rng, layouts):
+    from repro.core import stacked_probe
+    filts = [BloomRF(lay) for lay in layouts]
+    rows = [f.build(jnp.asarray(
+        rng.integers(0, 1 << f.layout.d, 1500, dtype=np.uint64), f.kdtype))
+        for f in filts]
+    flat = jnp.concatenate(rows)
+    bases = tuple(int(b) for b in np.cumsum(
+        [0] + [lay.total_u32 for lay in layouts[:-1]]))
+    return stacked_probe(tuple(layouts), bases), filts, rows, flat
+
+
+def test_stacked_probe_bit_identical_mixed_layouts(rng):
+    layouts = [basic_layout(32, 1500, 14.0, delta=6),
+               basic_layout(32, 1500, 14.0, delta=6),
+               basic_layout(32, 6000, 14.0, delta=5),
+               basic_layout(32, 24000, 12.0, delta=7)]
+    sp, filts, rows, flat = _stack_case(rng, layouts)
+    assert len(sp.spans) == 3            # two same-layout rows share a span
+    lo = rng.integers(0, 1 << 32, 20000, dtype=np.uint64).astype(np.uint32)
+    hi = np.minimum(lo.astype(np.uint64) + (1 << 12),
+                    (1 << 32) - 1).astype(np.uint32)
+    got = np.asarray(sp.range_all(flat, jnp.asarray(lo), jnp.asarray(hi)))
+    for j, (f, row) in enumerate(zip(filts, rows)):
+        want = np.asarray(f.range(row, jnp.asarray(lo), jnp.asarray(hi)))
+        np.testing.assert_array_equal(got[:, j], want, err_msg=f"row {j}")
+    qs = jnp.asarray(rng.integers(0, 1 << 32, 20000,
+                                  dtype=np.uint64).astype(np.uint32))
+    gp = np.asarray(sp.point_all(flat, qs))
+    for j, (f, row) in enumerate(zip(filts, rows)):
+        np.testing.assert_array_equal(gp[:, j], np.asarray(f.point(row, qs)))
+
+
+def test_stacked_probe_per_row_bounds(rng):
+    layouts = [basic_layout(32, 2000, 14.0, delta=6)] * 3
+    sp, filts, rows, flat = _stack_case(rng, layouts)
+    lo = rng.integers(0, 1 << 32, (4000, 3), dtype=np.uint64).astype(np.uint32)
+    hi = np.minimum(lo.astype(np.uint64) + 2000,
+                    (1 << 32) - 1).astype(np.uint32)
+    got = np.asarray(sp.range_all(flat, jnp.asarray(lo), jnp.asarray(hi)))
+    for j, (f, row) in enumerate(zip(filts, rows)):
+        want = np.asarray(f.range(row, jnp.asarray(lo[:, j]),
+                                  jnp.asarray(hi[:, j])))
+        np.testing.assert_array_equal(got[:, j], want)
+
+
+def test_stacked_probe_single_gather_jaxpr(rng):
+    layouts = [basic_layout(32, 1000, 14.0, delta=6),
+               basic_layout(32, 4000, 14.0, delta=4),
+               basic_layout(32, 1000, 14.0, delta=6)]
+    sp, _, _, flat = _stack_case(rng, layouts)
+    lo = jnp.zeros(256, jnp.uint32)
+    hi = jnp.full(256, 9999, jnp.uint32)
+    jaxpr = jax.make_jaxpr(sp._range_all)(flat, lo, hi)
+    assert _count_gathers(jaxpr.jaxpr) == 1, jaxpr.pretty_print()
+    jaxpr_p = jax.make_jaxpr(sp._point_all)(flat, lo)
+    assert _count_gathers(jaxpr_p.jaxpr) == 1
+    # per-row bounds keep the invariant
+    lo2 = jnp.zeros((256, 3), jnp.uint32)
+    hi2 = jnp.full((256, 3), 9999, jnp.uint32)
+    jaxpr2 = jax.make_jaxpr(sp._range_all)(flat, lo2, hi2)
+    assert _count_gathers(jaxpr2.jaxpr) == 1
+
+
+def test_stacked_probe_validation():
+    from repro.core import StackedProbe, stacked_probe
+    lay = basic_layout(32, 1000, 14.0, delta=6)
+    with pytest.raises(ValueError, match="at least one"):
+        StackedProbe((), ())
+    with pytest.raises(ValueError, match="row bases"):
+        stacked_probe((lay, lay), (0,))
+    exact = FilterLayout(d=16, deltas=(7, 4), replicas=(1, 1),
+                         seg_of_layer=(1, 1), seg_bits=(1 << 5, 8192),
+                         exact_seg=0)
+    with pytest.raises(ValueError, match="exact-bitmap"):
+        stacked_probe((exact,), (0,))
+    sp = stacked_probe((lay,), (0,))
+    with pytest.raises(ValueError, match="bounds"):
+        sp._range_all(jnp.zeros(lay.total_u32, jnp.uint32),
+                      jnp.zeros((4, 7), jnp.uint32),
+                      jnp.zeros((4, 7), jnp.uint32))
+
+
+def test_filter_ops_stacked_dispatch_parity(rng):
+    from repro.kernels import FilterOps
+    lay = basic_layout(32, 2000, 14.0, delta=6)
+    f = BloomRF(lay)
+    rows = [f.build(jnp.asarray(
+        rng.integers(0, 1 << 32, 2000, dtype=np.uint64).astype(np.uint32)))
+        for _ in range(5)]
+    stack = jnp.stack(rows)
+    lo = rng.integers(0, 1 << 32, 600, dtype=np.uint64).astype(np.uint32)
+    hi = np.maximum(lo, lo + (1 << 11)).astype(np.uint32)
+    qs = jnp.asarray(rng.integers(0, 1 << 32, 600,
+                                  dtype=np.uint64).astype(np.uint32))
+    want_r = np.stack([np.asarray(f.range(r, jnp.asarray(lo),
+                                          jnp.asarray(hi))) for r in rows],
+                      axis=1)
+    want_p = np.stack([np.asarray(f.point(r, qs)) for r in rows], axis=1)
+    # resident Pallas kernel path vs forced XLA stacked path
+    for budget in (None, 1):
+        ops = FilterOps(lay, interpret=True, vmem_budget_u32=budget)
+        np.testing.assert_array_equal(
+            np.asarray(ops.range_stacked(stack, jnp.asarray(lo),
+                                         jnp.asarray(hi))), want_r)
+        np.testing.assert_array_equal(np.asarray(ops.point_stacked(stack, qs)),
+                                      want_p)
+
+
+def test_vmem_budget_knob():
+    from repro.kernels import DEFAULT_VMEM_BUDGET_U32, FilterOps
+    lay = basic_layout(32, 2000, 14.0, delta=6)
+    assert FilterOps(lay).vmem_budget_u32 == DEFAULT_VMEM_BUDGET_U32
+    assert FilterOps(lay).resident
+    forced = FilterOps(lay, vmem_budget_u32=lay.total_u32 - 1)
+    assert not forced.resident           # threshold is a real dispatch knob
+    assert FilterOps(lay, vmem_budget_u32=lay.total_u32).resident
+
+
 def test_insert_online_and_build_np_still_agree(rng):
     lay = basic_layout(32, 500, bits_per_key=12.0, delta=6)
     f = BloomRF(lay)

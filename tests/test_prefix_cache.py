@@ -80,3 +80,41 @@ def test_fp_stats_counters():
     idx.session_segments(1)
     idx.eviction_candidates(0, 10)
     assert idx.stats["range_probes"] == before + 2
+
+
+def test_store_backed_cold_tier_and_eviction():
+    """LSM-store backing: frozen entries mirror into the cold tier,
+    total-miss lookups fall through to it, and evict_window drops
+    segment entries while tombstoning the store."""
+    import pytest
+
+    from repro.store import Store, StoreConfig
+
+    store = Store(StoreConfig(d=32, memtable_limit=32, level0_runs=2))
+    idx = PrefixCacheIndex(bits_per_key=16, n_tenants=8,
+                           backing_store=store)
+    _freeze_sessions(idx, list(range(24)))
+    assert idx.lookup(3, 2) == [302]
+    # hot-tier eviction without store loss is impossible: drop from the
+    # segment map only, the cold tier still serves it
+    del idx.segments[0].entries[pack_key(3, 2)]
+    assert idx.lookup(3, 2) == [302]
+    assert idx.stats["store_hits"] == 1
+    # window eviction: segments narrowed by range filters, the cold tier
+    # swept with one store range-scan (hot-dropped keys included)
+    n = idx.evict_window(0, 7)
+    assert n == 8 * 4                # session 3 chunk 2 only in the store
+    for s in range(8):
+        for c in range(4):
+            assert idx.lookup(s, c) is None
+    assert idx.lookup(9, 1) == [901]
+    # a too-small store domain is rejected
+    with pytest.raises(ValueError, match="domain"):
+        PrefixCacheIndex(n_tenants=8,
+                         backing_store=Store(StoreConfig(d=16)))
+    # late attachment backfills already-frozen segments into the cold tier
+    late = PrefixCacheIndex(bits_per_key=16, n_tenants=8)
+    _freeze_sessions(late, [5])
+    late.attach_store(Store(StoreConfig(d=32, memtable_limit=32)))
+    del late.segments[0].entries[pack_key(5, 1)]
+    assert late.lookup(5, 1) == [501]
