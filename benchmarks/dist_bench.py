@@ -24,16 +24,16 @@ machine-readable JSON (consumed by the CI benchmark job).
 from __future__ import annotations
 
 import argparse
+from dataclasses import replace as dataclass_replace
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from common import emit, timeit as _time, write_json
 
-from repro.core import BloomRF, basic_layout
-from repro.dist.filter_bank import FilterBank, ShardedFilterBank
-from repro.dist.tenant_bank import ShardedTenantFilterBank, TenantFilterBank
-from repro.kernels import FilterOps
+from repro.api import FilterSpec, open_filter
+from repro.dist.filter_bank import ShardedFilterBank
+from repro.dist.tenant_bank import ShardedTenantFilterBank
 
 SCHEMA = "bloomrf-dist-bench/v1"
 
@@ -83,11 +83,16 @@ def main() -> None:
     lo = lo64.astype(np.uint32)
     jq, jlo, jhi = jnp.asarray(qs), jnp.asarray(lo), jnp.asarray(hi)
 
-    lay = basic_layout(32, args.keys, args.bits_per_key, delta=6)
-    core = BloomRF(lay)
+    # every deployment shape opens through the typed façade (the
+    # production front door); the handles expose their impls for the
+    # shard_map variants and the raw-state timing loops below
+    mono = FilterSpec(dtype="u32", n=args.keys,
+                      bits_per_key=args.bits_per_key, delta=6)
+    core = open_filter(dataclass_replace(mono, backend="xla")).filter
     st = core.build(jnp.asarray(keys))
-    ops = FilterOps(lay)
-    bank = FilterBank(32, args.shards, args.keys, args.bits_per_key, delta=6)
+    ops = open_filter(dataclass_replace(mono, backend="resident")).ops
+    bank = open_filter(dataclass_replace(
+        mono, placement="bank", shards=args.shards)).bank
     bst = bank.build(jnp.asarray(keys))
     # largest device count the shard rows divide over
     n_dev = len(jax.devices())
@@ -109,8 +114,9 @@ def main() -> None:
 
     # -- multi-tenant bank -------------------------------------------------
     T, S = args.tenants, args.tenant_shards
-    tb = TenantFilterBank(32, T, S, max(args.keys // T, 1),
-                          args.bits_per_key, delta=6)
+    tb = open_filter(dataclass_replace(
+        mono, placement="tenant", tenants=T, shards=S,
+        n=max(args.keys // T, 1))).bank
     tenants = rng.integers(0, T, args.keys).astype(np.uint32)
     qt = jnp.asarray(rng.integers(0, T, Q).astype(np.uint32))
     jt, jk = jnp.asarray(tenants), jnp.asarray(keys)

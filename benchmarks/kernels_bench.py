@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BloomRF, basic_layout
+from repro.api import FilterSpec, open_filter
 
 from .common import emit, gen_keys, timeit as _time
 
@@ -20,10 +20,13 @@ Q = 200_000
 def run():
     rows = []
     rng = np.random.default_rng(13)
-    lay = basic_layout(32, N, 16.0, delta=6)
-    f = BloomRF(lay)
+    # the production path: the typed façade opens the same basic layout
+    # the pre-façade driver hand-built (u32, 16 b/key, Δ=6, default seed)
+    h = open_filter(FilterSpec(dtype="u32", n=N, bits_per_key=16.0,
+                               delta=6, backend="xla"))
     keys = gen_keys(N, "uniform", rng).astype(np.uint32)
-    state = f.build_np(keys)
+    h.insert(keys)
+    f, state = h.filter, h.state
 
     qs = jnp.asarray(gen_keys(Q, "uniform", rng).astype(np.uint32))
     point = jax.jit(f.point)

@@ -4,9 +4,15 @@ filter-pruned read path (the paper's RocksDB experiment, §9, standalone).
 For each key distribution and filter backend the driver loads N keys
 through the memtable (flushes + compactions build the run pyramid), then
 runs a mixed phase of OPS operations — ``SCAN_FRAC`` short range scans
-(YCSB-E's dominant op; scans batch through ``Store.scan_many``, ONE fused
+(YCSB-E's dominant op; scans batch through ``scan_many``, ONE fused
 gather over all live runs' stacked filter state per batch) interleaved
-with inserts.  Reported per setting:
+with inserts.  The store is opened through the typed façade
+(``repro.open_filter``), so the benchmark measures the production path —
+including the codec layer.  Distributions: ``uniform`` / ``zipf``
+(32-bit integer keys) and ``float`` (float32 keys through the f32 codec —
+the paper's §8 floating-point support, end-to-end through ``Store.scan``).
+
+Reported per setting:
 
 * ``runs probed per scan``  — data-block reads a scan actually paid for
   (the paper's pruned-SSTable-reads axis); the ``none`` backend is the
@@ -16,7 +22,9 @@ with inserts.  Reported per setting:
 * ``us/op``                 — wall time of the mixed phase.
 
 Backends: ``bloomrf`` (stacked one-gather probes), ``none`` (fences
-only), plus host-side baselines from ``repro.filters``.
+only), plus host-side baselines from ``repro.filters``; the ``float``
+distribution runs bloomrf vs none only (the CI gate compares its pruning
+against the committed uniform row).
 
 Run standalone (full sizes; the nightly row):
   PYTHONPATH=src python -m benchmarks.store_bench --json BENCH_STORE.json
@@ -29,7 +37,8 @@ import time
 
 import numpy as np
 
-from repro.store import Store, StoreConfig
+from repro.api import FilterSpec, open_filter
+from repro.core import u32_to_float32
 
 from .common import emit, gen_keys, write_json
 
@@ -42,21 +51,45 @@ MEMTABLE = 8_192     # memtable flush threshold (capacity class 0)
 LEVEL0 = 8           # level-0 run count triggering compaction
 FANOUT = 4
 BPK = 14.0           # filter bits per key
-RSIZE = 1 << 8       # scan range width (short YCSB-E scans)
+RSIZE = 1 << 8       # scan range width (short YCSB-E scans; code units)
 SCAN_FRAC = 0.95     # YCSB-E: 95% scans / 5% inserts
 SCAN_BATCH = 512     # scans per fused probe batch
 NEAR_MISS = 0.2      # share of scans starting just past a stored key
-DISTS = ("uniform", "zipf")
+DISTS = ("uniform", "zipf", "float")
 BACKENDS = ("bloomrf", "none", "prefix_bloom", "rosetta")
+FLOAT_BACKENDS = ("bloomrf", "none")
+
+
+def _f32_keys(codes: np.ndarray, rng) -> np.ndarray:
+    """Finite float32 keys whose φ codes are the given uint32 codes.
+
+    The f32 codec is a bijection, so pushing the *uniform integer* code
+    distribution through ``u32_to_float32`` yields a float workload whose
+    filter behaviour is directly comparable to the ``uniform`` row (the
+    CI gate compares exactly that).  Code bands that decode to NaN — or
+    whose ``+RSIZE`` scan window would reach one — are resampled."""
+    codes = codes.astype(np.uint32)
+    win = np.uint32(max(RSIZE - 1, 0))
+    for _ in range(64):
+        bad = (np.isnan(u32_to_float32(codes))
+               | np.isnan(u32_to_float32(codes + win)))
+        if not bad.any():
+            return u32_to_float32(codes)
+        codes = np.where(
+            bad, rng.integers(0, 1 << 31, len(codes),
+                              dtype=np.uint64).astype(np.uint32), codes)
+    raise RuntimeError("could not draw NaN-free float32 codes")
 
 
 def _keys(n: int, dist: str, rng) -> np.ndarray:
-    """Keys in the store's 32-bit domain.
+    """Keys in the store's 32-bit domain (uint32 codes or float32 values).
 
     zipf keys are drawn directly in the small domain (cluster scaled to
     2^31 with a 2^22 jitter window) — truncating the 64-bit generator's
     output would drop the jitter bits and collapse the cluster onto a
     handful of duplicate keys."""
+    if dist == "float":
+        return _f32_keys(gen_keys(n, "uniform", rng) >> np.uint64(32), rng)
     if dist == "zipf":
         z = rng.zipf(1.2, n).astype(np.float64)
         z = z / (z.max() + 1.0)
@@ -66,7 +99,7 @@ def _keys(n: int, dist: str, rng) -> np.ndarray:
     return gen_keys(n, dist, rng) >> np.uint64(32)
 
 
-def _scan_starts(n: int, data: np.ndarray, rng) -> np.ndarray:
+def _scan_starts(n: int, dist: str, data: np.ndarray, rng) -> np.ndarray:
     """Scan start keys: mostly-empty queries, the range-filter literature's
     evaluation regime (the paper measures FPR over empty ranges).
 
@@ -74,54 +107,74 @@ def _scan_starts(n: int, data: np.ndarray, rng) -> np.ndarray:
     wherever the data is sparse); ``NEAR_MISS`` are *correlated near
     misses* — a stored key plus a small gap, the adversarial case for
     prefix-based filters (cf. Rosetta/Proteus workloads)."""
-    uni = rng.integers(0, 1 << 31, n, dtype=np.uint64)
-    anchor = data[rng.integers(0, len(data), n)]
-    gap = rng.integers(RSIZE, 32 * RSIZE, n, dtype=np.uint64)
-    near = np.minimum(anchor + gap, np.uint64((1 << 32) - 1))
     take_near = rng.random(n) < NEAR_MISS
+    uni = rng.integers(0, 1 << 31, n, dtype=np.uint64)
+    gap = rng.integers(RSIZE, 32 * RSIZE, n, dtype=np.uint64)
+    if dist == "float":
+        from repro.core import float32_to_u32
+
+        anchor = float32_to_u32(
+            data[rng.integers(0, len(data), n)]).astype(np.uint64)
+        near = np.minimum(anchor + gap, np.uint64((1 << 32) - 1 - RSIZE))
+        return _f32_keys(np.where(take_near, near, uni), rng)
+    anchor = data[rng.integers(0, len(data), n)]
+    near = np.minimum(anchor + gap, np.uint64((1 << 32) - 1))
     return np.where(take_near, near, uni)
 
 
+def _scan_bounds(lo: np.ndarray, dist: str) -> np.ndarray:
+    if dist == "float":
+        from repro.core import float32_to_u32
+
+        return u32_to_float32(float32_to_u32(lo)
+                              + np.uint32(max(RSIZE - 1, 0)))
+    return np.minimum(lo + np.uint64(max(RSIZE - 1, 0)),
+                      np.uint64((1 << 32) - 1))
+
+
 def run_one(backend: str, dist: str, seed: int = 0x57043) -> tuple:
-    """(store, us_per_op) after load + mixed phase; same op stream for
-    every backend (seeded), so pruning metrics are directly comparable."""
+    """(typed store handle, us_per_op) after load + mixed phase; same op
+    stream for every backend (seeded), so pruning metrics are directly
+    comparable."""
     import dataclasses
 
     rng = np.random.default_rng(seed)
-    store = Store(StoreConfig(
-        d=32, memtable_limit=MEMTABLE, level0_runs=LEVEL0, fanout=FANOUT,
-        bits_per_key=BPK, filter_backend=backend))
+    handle = open_filter(FilterSpec(
+        dtype="f32" if dist == "float" else "u32", placement="store",
+        memtable_limit=MEMTABLE, level0_runs=LEVEL0, fanout=FANOUT,
+        bits_per_key=BPK, delta=6, store_backend=backend))
     data = _keys(N, dist, rng)
+    as_key = float if dist == "float" else int
     for i, k in enumerate(data):
-        store.put(int(k), i)
-    store.flush()
+        handle.put(as_key(k), i)
+    handle.flush()
 
     # whole batches only, so one compiled probe shape serves the phase
     n_scans = max(int(OPS * SCAN_FRAC) // SCAN_BATCH, 1) * SCAN_BATCH
     n_ins = max(OPS - n_scans, 0)
-    lo = _scan_starts(n_scans, data, rng)
-    hi = np.minimum(lo + np.uint64(max(RSIZE - 1, 0)), np.uint64((1 << 32) - 1))
+    lo = _scan_starts(n_scans, dist, data, rng)
+    hi = _scan_bounds(lo, dist)
     ins = _keys(max(n_ins, 1), dist, rng)
     # warm up the fused probe (compile) outside the timed phase, then undo
     # the warm-up's counter contribution
-    pre = dataclasses.replace(store.stats)
-    store.scan_many(lo[:SCAN_BATCH], hi[:SCAN_BATCH])
-    store.stats = pre
+    pre = dataclasses.replace(handle.stats)
+    handle.scan_many(lo[:SCAN_BATCH], hi[:SCAN_BATCH])
+    handle.store.stats = pre
     t0 = time.perf_counter()
     done_ins = 0
     for s in range(0, n_scans, SCAN_BATCH):
-        store.scan_many(lo[s:s + SCAN_BATCH], hi[s:s + SCAN_BATCH])
+        handle.scan_many(lo[s:s + SCAN_BATCH], hi[s:s + SCAN_BATCH])
         # interleave the insert share owed by this slice of the stream
         owed = round(n_ins * min(s + SCAN_BATCH, n_scans) / n_scans)
         for k in ins[done_ins:owed]:
-            store.put(int(k), 0)
+            handle.put(as_key(k), 0)
         done_ins = owed
     dt = time.perf_counter() - t0
-    return store, dt / max(n_scans + n_ins, 1) * 1e6
+    return handle, dt / max(n_scans + n_ins, 1) * 1e6
 
 
-def metrics(store: Store, us_per_op: float) -> dict:
-    s = store.stats
+def metrics(handle, us_per_op: float) -> dict:
+    s = handle.stats
     total_bytes = max(s.bytes_read + s.bytes_not_read, 1)
     return {
         "runs_probed_per_scan": s.runs_probed_per_scan,
@@ -129,7 +182,7 @@ def metrics(store: Store, us_per_op: float) -> dict:
         "scan_filter_skips": s.scan_filter_skips,
         "scan_fence_skips": s.scan_fence_skips,
         "scans": s.scans,
-        "runs_live": store.n_runs,
+        "runs_live": handle.n_runs,
         "compactions": s.compactions,
         "or_merges": s.or_merges,
         "rebuild_merges": s.rebuild_merges,
@@ -142,9 +195,10 @@ def run(section: dict | None = None):
     """Bench rows (+ per-setting metrics into ``section`` when given)."""
     rows = []
     for dist in DISTS:
-        for backend in BACKENDS:
-            store, us = run_one(backend, dist)
-            m = metrics(store, us)
+        backends = FLOAT_BACKENDS if dist == "float" else BACKENDS
+        for backend in backends:
+            handle, us = run_one(backend, dist)
+            m = metrics(handle, us)
             if section is not None:
                 section[f"{dist}/{backend}"] = m
             rows.append(emit(

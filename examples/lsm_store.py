@@ -17,12 +17,14 @@ os.environ.setdefault("JAX_ENABLE_X64", "1")
 
 import numpy as np
 
-from repro.store import Store, StoreConfig
+from repro import FilterSpec, open_filter
 
 if __name__ == "__main__":
     rng = np.random.default_rng(7)
-    db = Store(StoreConfig(d=32, memtable_limit=4_000, level0_runs=6,
-                           fanout=4, bits_per_key=16.0))
+    handle = open_filter(FilterSpec(dtype="u32", placement="store",
+                                    memtable_limit=4_000, level0_runs=6,
+                                    fanout=4, bits_per_key=16.0))
+    db = handle.store
     keys = rng.integers(0, 1 << 31, 60_000, dtype=np.uint64)
     for i, k in enumerate(keys):
         db.put(int(k), f"v{i}")

@@ -2,6 +2,10 @@
 ``Run < 300 AND ObjectID = x`` answered by ONE filter over concatenated
 attributes, vs two single-attribute filters combined conjunctively.
 
+The façade's ``multiattr`` dtype inserts both the <A,B> and <B,A>
+concatenations; ``range((a, b_lo), (a, b_hi))`` probes the <A,B> codes and
+``range_where_b`` the mirrored <B,A> codes — no hand-rolled packing.
+
     PYTHONPATH=src python examples/multi_attribute.py
 """
 import os
@@ -9,9 +13,8 @@ os.environ.setdefault("JAX_ENABLE_X64", "1")
 
 import numpy as np
 
-from repro.core.codecs import (multiattr_insert_codes,
-                               multiattr_range_for_a_eq_b_range)
-from repro.filters import BloomRFAdapter
+from repro import FilterSpec, open_filter
+from repro.core import pack2x32
 
 rng = np.random.default_rng(16)
 N, Q = 200_000, 10_000
@@ -20,20 +23,23 @@ N, Q = 200_000, 10_000
 run = np.abs(rng.normal(400, 150, N)).astype(np.uint64)
 obj = rng.integers(0, 1 << 31, N, dtype=np.uint64)
 
-ab, ba = multiattr_insert_codes(obj, run)       # <Obj,Run> and <Run,Obj>
-dual = BloomRFAdapter(16, mode="tuned", R=2.0 ** 32)
-dual.build(np.concatenate([ab, ba]))
+dual = open_filter(FilterSpec(dtype="multiattr", n=N, bits_per_key=16.0,
+                              range_log2=32, backend="xla"))
+dual.insert((obj, run))                         # sets <Obj,Run> and <Run,Obj>
 
-sep_obj = BloomRFAdapter(16, mode="basic")
-sep_obj.build(obj)
+sep_obj = open_filter(FilterSpec(dtype="u64", n=N, bits_per_key=16.0))
+sep_obj.insert(obj)
 
 qs = rng.integers(0, 1 << 31, Q, dtype=np.uint64)
-lo, hi = multiattr_range_for_a_eq_b_range(qs, np.uint64(0), np.uint64(299))
+zeros = np.zeros(Q, np.uint64)
+caps = np.full(Q, 299, np.uint64)
 
-res_dual = dual.range(lo, hi)
+res_dual = dual.range((qs, zeros), (qs, caps))  # Obj == x AND Run in [0,299]
 res_sep = sep_obj.point(qs)   # the Run<300 single filter is ~always true
 
-ks = np.sort(ab)
+ks = np.sort(pack2x32(obj, run))
+lo = pack2x32(qs, zeros)
+hi = pack2x32(qs, caps)
 idx = np.searchsorted(ks, lo)
 truth = (idx < len(ks)) & (ks[np.minimum(idx, len(ks) - 1)] <= hi)
 for name, res in (("dual-attribute", res_dual), ("two separate", res_sep)):

@@ -1,6 +1,8 @@
-"""Quickstart: build a bloomRF, run point + range queries, compare the
-empirical FPR against the paper's model, and let the tuning advisor pick a
-layout for large ranges.
+"""Quickstart: open a bloomRF through the typed façade, run point + range
+queries, compare the empirical FPR against the paper's model, and let the
+spec's tuning budget pick an advisor layout for large ranges — then do the
+same with float keys, which the façade encodes through the order-preserving
+φ codec (paper §8).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,36 +10,33 @@ import os
 os.environ.setdefault("JAX_ENABLE_X64", "1")
 
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import BloomRF, basic_layout
+from repro import FilterSpec, open_filter
 from repro.core.model import basic_range_fpr
-from repro.core.tuning import advise
 
 rng = np.random.default_rng(42)
 
 # --- basic bloomRF: tuning-free, good to ranges ~2^14 --------------------
 n = 100_000
 keys = rng.integers(0, 1 << 63, n, dtype=np.uint64)
-layout = basic_layout(d=64, n_keys=n, bits_per_key=17.0, delta=7)
-filt = BloomRF(layout)
-state = filt.build_np(keys)
-print(layout.describe())
+f = open_filter(FilterSpec(dtype="u64", n=n, bits_per_key=17.0,
+                           range_log2=14))
+f.insert(keys)
+print(f.describe())
+print(f.layout.describe())
 
 # point membership: never a false negative
-assert bool(filt.point(state, jnp.asarray(keys[0], filt.kdtype)))
-print("point(inserted key) ->", bool(filt.point(state, jnp.asarray(keys[0]))))
+print("point(inserted key) ->", bool(f.point(keys[:1])[0]))
 
 # range query: "any key in [lo, hi]?"
 lo, hi = np.uint64(keys[0] - 5), np.uint64(keys[0] + 5)
-print(f"range[{lo}, {hi}] ->", bool(filt.range(state, jnp.uint64(lo),
-                                               jnp.uint64(hi))))
+print(f"range[{lo}, {hi}] ->", bool(f.range([lo], [hi])[0]))
 
 # empirical vs model FPR for ranges of 2^14
 Q = 20_000
 qlo = rng.integers(0, 1 << 63, Q, dtype=np.uint64)
 qhi = qlo + np.uint64(2 ** 14 - 1)
-res = np.asarray(filt.range(state, jnp.asarray(qlo), jnp.asarray(qhi)))
+res = f.range(qlo, qhi)
 ks = np.sort(keys)
 idx = np.searchsorted(ks, qlo)
 truth = (idx < n) & (ks[np.minimum(idx, n - 1)] <= qhi)
@@ -45,19 +44,27 @@ emp = (res & ~truth).sum() / max((~truth).sum(), 1)
 print(f"range 2^14 FPR: empirical {emp:.4f} vs model bound "
       f"{basic_range_fpr(64, n, 17.0 * n, 2**14):.4f}")
 
-# --- tuned bloomRF for big ranges (paper §7) ------------------------------
-res = advise(d=64, n=n, m_bits=16 * n, R=1e9)
-print(f"\nadvisor for R=1e9: exact level {res.exact_level}, "
-      f"deltas {res.layout.deltas}, predicted point FPR {res.fpr_point:.4f}, "
-      f"range FPR {res.fpr_range_max:.4f}")
-tuned = BloomRF(res.layout)
-tstate = tuned.build_np(keys)
+# --- tuned bloomRF for big ranges (paper §7): range_log2=30 -> advisor ----
+tuned = open_filter(FilterSpec(dtype="u64", n=n, bits_per_key=16.0,
+                               range_log2=30, backend="xla"))
+tuned.insert(keys)
+print(f"\n{tuned.describe()}: tuning={tuned.tuning}, "
+      f"exact_level={tuned.layout.exact_level}, deltas={tuned.layout.deltas}")
 big_lo = rng.integers(0, 1 << 63, 5000, dtype=np.uint64)
 big_hi = big_lo + np.uint64(int(1e9))
-r = np.asarray(tuned.range(tstate, jnp.asarray(big_lo), jnp.asarray(big_hi)))
+r = tuned.range(big_lo, big_hi)
 idx = np.searchsorted(ks, big_lo)
 truth = (idx < n) & (ks[np.minimum(idx, n - 1)] <= big_hi)
 assert not (truth & ~r).any(), "false negative!"
 print(f"tuned filter, |R|=1e9: FPR "
       f"{(r & ~truth).sum() / max((~truth).sum(), 1):.4f} "
       f"(no false negatives on {int(truth.sum())} non-empty ranges)")
+
+# --- typed keys: float64 through the φ codec ------------------------------
+temps = rng.normal(20.0, 15.0, 50_000)
+ff = open_filter(FilterSpec(dtype="f64", n=len(temps), bits_per_key=16.0))
+ff.insert(temps)
+assert ff.point(temps[:100]).all()
+hot = ff.range(np.full(1, 35.0), np.full(1, 1000.0))
+print(f"\nfloat keys: any reading in [35C, 1000C]? -> {bool(hot[0])} "
+      f"(truth: {bool((temps >= 35.0).any())})")

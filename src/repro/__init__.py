@@ -1,0 +1,40 @@
+"""bloomRF reproduction, grown into a sharded jax/pallas filter system.
+
+The public front door is the typed façade (DESIGN.md §11)::
+
+    import repro
+
+    f = repro.open_filter(repro.FilterSpec(dtype="f64", n=100_000))
+    f.insert(keys)                 # typed keys — codecs applied inside
+    f.range(lo, hi)                # one fused gather per probe batch
+
+Subpackages (``repro.core``, ``repro.kernels``, ``repro.dist``,
+``repro.store``, ``repro.serve``, ``repro.filters``) stay importable
+directly; the pre-façade constructors they expose are deprecated shims
+that warn with their ``FilterSpec`` equivalent.
+
+Attribute access is lazy (PEP 562) so ``import repro`` stays cheap and
+subpackage imports never cycle through the façade.
+"""
+from __future__ import annotations
+
+__all__ = ["FilterSpec", "open_filter", "chunked_probe", "LegacyAPIWarning"]
+
+_API = ("FilterSpec", "open_filter", "chunked_probe", "SingleFilter",
+        "BankFilter", "TenantFilter", "TypedStore")
+
+
+def __getattr__(name: str):
+    if name in _API:
+        from . import api
+
+        return getattr(api, name)
+    if name == "LegacyAPIWarning":
+        from ._compat import LegacyAPIWarning
+
+        return LegacyAPIWarning
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_API) | {"LegacyAPIWarning"})

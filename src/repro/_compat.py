@@ -1,0 +1,41 @@
+"""Deprecation machinery for the pre-façade entry points (DESIGN.md §11).
+
+Since the typed façade (``repro.open_filter``/``repro.FilterSpec``) became
+the public front door, the five historical constructors — ``BloomRF``,
+``FilterOps``, ``FilterBank``, ``TenantFilterBank``, ``Store`` — are
+legacy shims: they still work, but constructing one directly emits a
+:class:`LegacyAPIWarning` pointing at the ``FilterSpec`` equivalent.
+
+In-tree code must never go through a shim: every internal construction
+site passes the private ``_warn=False`` keyword, and the test suite turns
+``LegacyAPIWarning`` raised *from a repro module* into an error
+(``filterwarnings`` in pyproject.toml), so an accidental in-tree use of a
+deprecated entry point fails tier-1 CI.  Warnings are attributed to the
+*caller* of the constructor (``stacklevel``), which is what makes the
+module-scoped filter work: user/test code sees a plain warning, repro
+code sees an error.
+"""
+from __future__ import annotations
+
+import warnings
+
+__all__ = ["LegacyAPIWarning", "warn_legacy"]
+
+
+class LegacyAPIWarning(DeprecationWarning):
+    """A pre-façade constructor was used directly (see DESIGN.md §11)."""
+
+
+def warn_legacy(old: str, spec_hint: str) -> None:
+    """Warn that ``old`` is a legacy entry point.
+
+    ``spec_hint`` is the ``FilterSpec(...)`` argument list that opens the
+    equivalent filter through the façade.  Called from a legacy
+    constructor's ``__init__``; ``stacklevel=3`` attributes the warning to
+    whoever invoked that constructor.
+    """
+    warnings.warn(
+        f"{old} is a deprecated public entry point; open it through the "
+        f"typed façade instead: repro.open_filter(repro.FilterSpec("
+        f"{spec_hint})). See DESIGN.md §11 for the full old→new map.",
+        LegacyAPIWarning, stacklevel=3)

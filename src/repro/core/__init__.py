@@ -1,5 +1,9 @@
 """bloomRF core: the paper's contribution as a composable JAX module."""
 from .bloomrf import BloomRF
+from .codecs import (float32_to_u32, float64_to_u64, multiattr_insert_codes,
+                     multiattr_range_for_a_eq_b_range, pack2, pack2x32,
+                     string_point_code, string_range_bounds, u32_to_float32,
+                     u64_to_float64, unpack2, unpack2x32)
 from .engine import (PointPlan, ProbeEngine, RangePlan, StackedProbe,
                      stacked_probe)
 from .hashing import dyadic_prefixes, key_dtype_for
@@ -17,4 +21,17 @@ __all__ = [
     "stacked_probe",
     "dyadic_prefixes",
     "key_dtype_for",
+    # order-preserving codecs (paper §8) — the typed façade's key layer
+    "float64_to_u64",
+    "u64_to_float64",
+    "float32_to_u32",
+    "u32_to_float32",
+    "string_point_code",
+    "string_range_bounds",
+    "pack2",
+    "unpack2",
+    "pack2x32",
+    "unpack2x32",
+    "multiattr_insert_codes",
+    "multiattr_range_for_a_eq_b_range",
 ]

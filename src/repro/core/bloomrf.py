@@ -56,9 +56,20 @@ def _mask_u32(a, b):
 
 
 class BloomRF:
-    """Unified point-range filter (paper §3–§7)."""
+    """Unified point-range filter (paper §3–§7).
 
-    def __init__(self, layout: FilterLayout):
+    Direct construction is a legacy entry point: the typed façade
+    (``repro.open_filter``) builds filters from a :class:`~repro.api.FilterSpec`
+    and threads key codecs and tuning for you.  In-tree call sites pass
+    ``_warn=False`` (see ``repro._compat``).
+    """
+
+    def __init__(self, layout: FilterLayout, *, _warn: bool = True):
+        if _warn:
+            from .._compat import warn_legacy
+
+            warn_legacy("BloomRF(layout)",
+                        "dtype=..., n=..., placement='single', backend='xla'")
         require_x64(layout.d)
         self.layout = layout
         self.kdtype = key_dtype_for(layout.d)

@@ -18,9 +18,13 @@ __all__ = [
     "float64_to_u64",
     "u64_to_float64",
     "float32_to_u32",
+    "u32_to_float32",
     "string_point_code",
     "string_range_bounds",
+    "pack2",
+    "unpack2",
     "pack2x32",
+    "unpack2x32",
     "multiattr_insert_codes",
     "multiattr_range_for_a_eq_b_range",
 ]
@@ -43,6 +47,12 @@ def float32_to_u32(x) -> np.ndarray:
     b = np.asarray(x, np.float32).view(np.uint32)
     sign = (b >> np.uint32(31)) != 0
     return np.where(sign, ~b, b | np.uint32(1 << 31))
+
+
+def u32_to_float32(c) -> np.ndarray:
+    c = np.asarray(c, np.uint32)
+    sign = (c >> np.uint32(31)) == 0
+    return np.where(sign, ~c, c & ~np.uint32(1 << 31)).view(np.float32)
 
 
 def _str_tail_hash(s: bytes) -> int:
@@ -68,11 +78,29 @@ def string_range_bounds(lo: str | bytes, hi: str | bytes) -> tuple:
             (int.from_bytes(bh, "big") << 8) | 0xFF)
 
 
-def pack2x32(a, b) -> np.ndarray:
-    """Concatenate two (reduced-precision) 32-bit attributes into a u64 key."""
+def pack2(a, b, b_bits: int) -> np.ndarray:
+    """Order-preserving concatenation ``<A,B>`` with a ``b_bits``-wide low
+    field: ``(a, b) < (a', b')`` lexicographically  <=>  code < code'.
+    Generalises :func:`pack2x32`; the serve layer packs (session, chunk)
+    keys through this with ``b_bits=16``."""
     a = np.asarray(a, np.uint64)
     b = np.asarray(b, np.uint64)
-    return (a << np.uint64(32)) | (b & np.uint64(0xFFFFFFFF))
+    return (a << np.uint64(b_bits)) | (b & np.uint64((1 << b_bits) - 1))
+
+
+def unpack2(code, b_bits: int) -> tuple:
+    code = np.asarray(code, np.uint64)
+    return code >> np.uint64(b_bits), code & np.uint64((1 << b_bits) - 1)
+
+
+def pack2x32(a, b) -> np.ndarray:
+    """Concatenate two (reduced-precision) 32-bit attributes into a u64 key."""
+    return pack2(a, b, 32)
+
+
+def unpack2x32(code) -> tuple:
+    """Split a :func:`pack2x32` code back into its (a, b) attributes."""
+    return unpack2(code, 32)
 
 
 def multiattr_insert_codes(a, b) -> tuple:

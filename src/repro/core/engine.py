@@ -480,7 +480,7 @@ class StackedProbe:
 
 @functools.lru_cache(maxsize=None)
 def _filter_for_layout(layout) -> BloomRF:
-    return BloomRF(layout)
+    return BloomRF(layout, _warn=False)
 
 
 @functools.lru_cache(maxsize=None)

@@ -71,7 +71,7 @@ class StreamDeduper:
 
     def __init__(self, expected_docs: int, bits_per_key: float = 14.0):
         self.layout = basic_layout(32, expected_docs, bits_per_key, delta=6)
-        self.filter = BloomRF(self.layout)
+        self.filter = BloomRF(self.layout, _warn=False)
         self.state = self.filter.init_state()
         self.stats = {"seen": 0, "dropped": 0}
 
@@ -98,7 +98,7 @@ class ShardRangeIndex:
     def add_shard(self, shard_id: int, timestamps: np.ndarray) -> None:
         lay = basic_layout(32, max(len(timestamps), 1), self.bits_per_key,
                            delta=6)
-        f = BloomRF(lay)
+        f = BloomRF(lay, _warn=False)
         st = f.build(jnp.asarray(timestamps, jnp.uint32))
         self.shards[shard_id] = (f, st)
 

@@ -54,7 +54,12 @@ class FilterBank:
 
     def __init__(self, d: int, n_shards: int, n_keys: int,
                  bits_per_key: float = 16.0, delta: int = 6,
-                 seed: int = 0x0B100F11):
+                 seed: int = 0x0B100F11, *, _warn: bool = True):
+        if _warn:
+            from .._compat import warn_legacy
+
+            warn_legacy("FilterBank(d, n_shards, ...)",
+                        "dtype=..., n=..., placement='bank', shards=...")
         if n_shards < 1 or n_shards & (n_shards - 1):
             raise ValueError(f"n_shards must be a power of two, got {n_shards}")
         shard_bits = n_shards.bit_length() - 1
@@ -68,7 +73,7 @@ class FilterBank:
         self.layout = basic_layout(self.d_local,
                                    max(n_keys // n_shards, 1), bits_per_key,
                                    delta=min(delta, self.d_local), seed=seed)
-        self.filter = BloomRF(self.layout)
+        self.filter = BloomRF(self.layout, _warn=False)
         # all shard rows probed at once: one fused gather (core/engine.py)
         self._stacked = stacked_probe(
             (self.layout,) * n_shards,

@@ -77,29 +77,48 @@ class TenantFilterBank:
     def __init__(self, d: int, n_tenants: int, n_shards: int,
                  n_keys_per_tenant: int, bits_per_key: float = 16.0,
                  delta: int = 6, meta_level: Optional[int] = None,
-                 meta_bits_per_prefix: float = 8.0, seed: int = 0x0B100F11):
+                 meta_bits_per_prefix: float = 8.0, seed: int = 0x0B100F11,
+                 *, _warn: bool = True):
+        if _warn:
+            from .._compat import warn_legacy
+
+            warn_legacy("TenantFilterBank(d, n_tenants, ...)",
+                        "dtype=..., n=..., placement='tenant', tenants=..., "
+                        "shards=...")
         if n_tenants < 1:
             raise ValueError(f"need >= 1 tenant, got {n_tenants}")
         self.bank = FilterBank(d, n_shards, n_keys_per_tenant, bits_per_key,
-                               delta=delta, seed=seed)
+                               delta=delta, seed=seed, _warn=False)
         self.d = d
         self.n_tenants = n_tenants
         self.n_shards = n_shards
         d_local = self.bank.d_local
         if meta_level is None:
-            # coarse default: a ~12-bit prefix domain per shard
-            meta_level = d_local - min(12, max(d_local - 1, 1))
+            # coarse default: a ~12-bit prefix domain per shard.  On >32-bit
+            # shard domains the prefix domain must stay in the same key
+            # dtype as the main rows (the meta rows join the main rows'
+            # stacked one-gather plan), so it widens to 33 bits there.
+            target = 12 if d_local <= 32 else 33
+            meta_level = d_local - min(target, max(d_local - 1, 1))
         if not (0 < meta_level < d_local):
             raise ValueError(
                 f"meta_level must be in (0, {d_local}), got {meta_level}")
         self.meta_level = meta_level
         d_meta = d_local - meta_level
+        from ..core.hashing import key_dtype_for
+
+        if key_dtype_for(d_meta) != key_dtype_for(d_local):
+            raise ValueError(
+                f"meta_level={meta_level} puts the {d_meta}-bit prefix "
+                f"domain in a different key dtype than the {d_local}-bit "
+                f"shard domain; the stacked main+meta plan needs one dtype "
+                f"(keep d_meta on the same side of 32 bits as d_local)")
         n_prefixes = max(min(n_keys_per_tenant // n_shards,
                              1 << min(d_meta, 24)), 1)
         self.meta_layout = basic_layout(
             d_meta, n_prefixes, meta_bits_per_prefix,
             delta=min(delta, max(d_meta, 1)), seed=seed ^ 0xB100F1)
-        self.meta = BloomRF(self.meta_layout)
+        self.meta = BloomRF(self.meta_layout, _warn=False)
         # stacked one-gather probes over all (tenant, shard) rows; the
         # meta variant appends the coarse rows to the same flat stack
         R = n_tenants * n_shards

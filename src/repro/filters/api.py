@@ -21,13 +21,12 @@ def mix64_np(x: np.ndarray, seed: int = 0) -> np.ndarray:
 
 
 def seeds_np(base: int, n: int) -> np.ndarray:
-    out = np.empty(n, np.uint64)
-    s = np.uint64(base)
-    for i in range(n):
-        with np.errstate(over="ignore"):
-            s = s + np.uint64(0x9E3779B97F4A7C15)
-        out[i] = mix64_np(np.asarray([s]))[0]
-    return out
+    """n derived seeds: splitmix64 over the golden-gamma sequence from
+    ``base`` (vectorized; identical values to the historical scalar loop)."""
+    with np.errstate(over="ignore"):
+        steps = np.uint64(base) + (np.uint64(0x9E3779B97F4A7C15)
+                                   * np.arange(1, n + 1, dtype=np.uint64))
+    return mix64_np(steps)
 
 
 @runtime_checkable

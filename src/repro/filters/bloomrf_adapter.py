@@ -1,13 +1,18 @@
-"""bloomRF adapted to the common host-side filter API used by benchmarks."""
+"""bloomRF adapted to the common host-side filter API used by benchmarks.
+
+Since the typed façade landed (DESIGN.md §11) this adapter is a thin shim:
+``build`` opens a :class:`repro.api.SingleFilter` from the equivalent
+:class:`~repro.api.FilterSpec` and every probe rides the façade's shared
+chunked probe path — the figure benchmarks therefore measure the
+production façade, not a private side door.
+"""
 from __future__ import annotations
 
+import math
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..core import BloomRF, basic_layout
-from ..core.tuning import advise
+from ..api import FilterSpec, open_filter
 
 __all__ = ["BloomRFAdapter"]
 
@@ -17,7 +22,12 @@ class BloomRFAdapter:
     * ``"basic"`` — tuning-free basic bloomRF (paper §3–§5), good to R<=2^14;
     * ``"tuned"`` — advisor-selected layout for the given R (paper §7);
     * ``"auto"``  — basic when R <= 2^14 else tuned.
+
+    Maps onto ``FilterSpec.tuning`` = ``"basic"`` / ``"advised"`` /
+    ``"auto"``.
     """
+
+    _TUNING = {"basic": "basic", "tuned": "advised", "auto": "auto"}
 
     def __init__(self, bits_per_key: float = 16.0, d: int = 64,
                  R: float = 2 ** 14, mode: str = "auto", delta: int = 7,
@@ -35,42 +45,32 @@ class BloomRFAdapter:
 
     def build(self, keys: np.ndarray) -> None:
         keys = np.asarray(keys, np.uint64)
-        n = max(len(keys), 1)
-        mode = self.mode
-        if mode == "auto":
-            mode = "basic" if self.R <= 2 ** 14 else "tuned"
-        if mode == "basic":
-            self.layout = basic_layout(self.d, n, self.bits_per_key,
-                                       delta=self.delta, seed=self.seed)
-        else:
-            self.layout = advise(self.d, n, int(n * self.bits_per_key),
-                                 self.R, point_weight=self.point_weight,
-                                 seed=self.seed).layout
-        self.filter = BloomRF(self.layout)
-        self.state = self.filter.build_np(keys)
-        self._point = jax.jit(self.filter.point)
-        self._range = jax.jit(self.filter.range)
+        range_log2 = max(int(math.ceil(math.log2(max(self.R, 2.0)))), 1)
+        self.handle = open_filter(FilterSpec(
+            dtype=f"u{self.d}", n=max(len(keys), 1),
+            bits_per_key=self.bits_per_key,
+            range_log2=min(range_log2, self.d),
+            tuning=self._TUNING[self.mode], delta=self.delta,
+            point_weight=self.point_weight, backend="xla",
+            chunk=self.chunk, seed=self.seed))
+        self.handle.insert(keys)
+        self.layout = self.handle.layout
+        self.filter = self.handle.filter
 
-    def _chunked(self, fn, *arrays):
-        outs = []
-        B = len(arrays[0])
-        for s in range(0, B, self.chunk):
-            args = [jnp.asarray(a[s:s + self.chunk], self.filter.kdtype)
-                    for a in arrays]
-            outs.append(np.asarray(fn(self.state, *args)))
-        return np.concatenate(outs) if outs else np.zeros(0, bool)
+    @property
+    def state(self):
+        return self.handle.state
 
     def point(self, qs: np.ndarray) -> np.ndarray:
-        return self._chunked(self._point, np.asarray(qs, np.uint64))
+        return self.handle.point(np.asarray(qs, np.uint64))
 
     def range(self, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
-        return self._chunked(self._range, np.asarray(lo, np.uint64),
-                             np.asarray(hi, np.uint64))
+        return self.handle.range(np.asarray(lo, np.uint64),
+                                 np.asarray(hi, np.uint64))
 
     def insert_more(self, keys: np.ndarray) -> None:
         """Online insertion (the paper's Problem 2: bloomRF is online)."""
-        self.state = self.filter.insert_online(
-            self.state, jnp.asarray(keys, self.filter.kdtype))
+        self.handle.insert(np.asarray(keys, np.uint64))
 
     def size_bits(self) -> int:
-        return self.layout.total_bits
+        return self.handle.size_bits()

@@ -5,7 +5,8 @@ dispatch wrapper.  Kernels are validated in interpret mode on CPU and target
 TPU VMEM tiling (see DESIGN.md §3 for the hardware adaptation).
 """
 from .insert import insert_resident
-from .ops import DEFAULT_VMEM_BUDGET_U32, FilterOps
+from .ops import (DEFAULT_VMEM_BUDGET_U32, FilterOps,
+                  read_vmem_budget_u32)
 from .probe import (point_probe_partitioned, point_probe_resident,
                     point_probe_stacked_resident)
 from .rangeprobe import (range_probe_partitioned, range_probe_resident,
@@ -14,6 +15,7 @@ from .rangeprobe import (range_probe_partitioned, range_probe_resident,
 __all__ = [
     "FilterOps",
     "DEFAULT_VMEM_BUDGET_U32",
+    "read_vmem_budget_u32",
     "point_probe_resident",
     "point_probe_partitioned",
     "point_probe_stacked_resident",

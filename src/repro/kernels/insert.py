@@ -52,7 +52,7 @@ def insert_resident(layout: FilterLayout, state: jax.Array, keys,
                     tile: int = DEFAULT_TILE, interpret: bool = True):
     """OR-accumulating bulk insert with the filter resident in VMEM."""
     check_kernel_layout(layout)
-    filt = BloomRF(layout)
+    filt = BloomRF(layout, _warn=False)
     keys = jnp.asarray(keys, jnp.uint32)
     B = keys.shape[0]
     Bp = _round_up(max(B, 1), tile)

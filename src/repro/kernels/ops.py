@@ -6,8 +6,9 @@ CPU for validation); on a real TPU backend pass ``interpret=False``.
 The resident/partitioned dispatch threshold is a config knob (DESIGN.md
 §3): filters of up to ``vmem_budget_u32`` lanes take the VMEM-resident
 kernels, larger ones the block-partitioned kernels.  The default comes
-from the ``BLOOMRF_VMEM_BUDGET_U32`` environment variable (read once at
-import) and falls back to 2^22 lanes = 16 MiB — a comfortable resident
+from the ``BLOOMRF_VMEM_BUDGET_U32`` environment variable (validated every
+time it is read: non-integer or <= 0 raises a ``ValueError`` naming the
+variable) and falls back to 2^22 lanes = 16 MiB — a comfortable resident
 footprint on a v5e core.  Deployments with other VMEM sizes, or tests
 that want to force the partitioned path, set the env var or pass
 ``vmem_budget_u32`` explicitly.
@@ -26,11 +27,32 @@ from . import probe as _probe
 from . import rangeprobe as _rangeprobe
 from .ref import check_kernel_layout
 
-__all__ = ["FilterOps", "DEFAULT_VMEM_BUDGET_U32"]
+__all__ = ["FilterOps", "DEFAULT_VMEM_BUDGET_U32", "read_vmem_budget_u32"]
 
-#: resident/partitioned threshold in uint32 lanes; env-overridable
-DEFAULT_VMEM_BUDGET_U32 = int(os.environ.get("BLOOMRF_VMEM_BUDGET_U32",
-                                             1 << 22))  # 16 MiB of lanes
+#: fallback resident/partitioned threshold in uint32 lanes (16 MiB of lanes)
+DEFAULT_VMEM_BUDGET_U32 = 1 << 22
+
+
+def read_vmem_budget_u32() -> int:
+    """The resident/partitioned threshold in uint32 lanes.
+
+    Reads ``BLOOMRF_VMEM_BUDGET_U32`` on every call (so tests and
+    deployments can flip it without re-importing) and validates it at read
+    time: a value that does not parse as an integer, or is <= 0, raises a
+    ``ValueError`` that names the variable."""
+    raw = os.environ.get("BLOOMRF_VMEM_BUDGET_U32")
+    if raw is None:
+        return DEFAULT_VMEM_BUDGET_U32
+    try:
+        val = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"BLOOMRF_VMEM_BUDGET_U32 must be an integer lane count, "
+            f"got {raw!r}") from None
+    if val <= 0:
+        raise ValueError(
+            f"BLOOMRF_VMEM_BUDGET_U32 must be > 0 lanes, got {val}")
+    return val
 
 
 def _on_tpu() -> bool:
@@ -51,12 +73,18 @@ class FilterOps:
     """
 
     def __init__(self, layout: FilterLayout, interpret: bool | None = None,
-                 vmem_budget_u32: int | None = None):
+                 vmem_budget_u32: int | None = None, *, _warn: bool = True):
+        if _warn:
+            from .._compat import warn_legacy
+
+            warn_legacy("FilterOps(layout)",
+                        "dtype=..., n=..., placement='single', "
+                        "backend='resident'|'partitioned'")
         check_kernel_layout(layout)
         self.layout = layout
-        self.filter = BloomRF(layout)
+        self.filter = BloomRF(layout, _warn=False)
         self.interpret = (not _on_tpu()) if interpret is None else interpret
-        self.vmem_budget_u32 = (DEFAULT_VMEM_BUDGET_U32
+        self.vmem_budget_u32 = (read_vmem_budget_u32()
                                 if vmem_budget_u32 is None else vmem_budget_u32)
         self.resident = layout.total_u32 <= self.vmem_budget_u32
 

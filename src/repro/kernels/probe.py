@@ -90,7 +90,7 @@ def point_probe_resident(layout: FilterLayout, state: jax.Array, keys,
                          tile: int = DEFAULT_TILE, interpret: bool = True):
     """Batched point probe with the filter resident in VMEM."""
     check_kernel_layout(layout)
-    filt = BloomRF(layout)
+    filt = BloomRF(layout, _warn=False)
     keys = jnp.asarray(keys, jnp.uint32)
     B = keys.shape[0]
     Bp = _round_up(max(B, 1), tile)
@@ -179,7 +179,7 @@ def point_probe_partitioned(layout: FilterLayout, state: jax.Array, keys,
     AND-reduced per key (segment reduction) back in XLA.
     """
     check_kernel_layout(layout)
-    filt = BloomRF(layout)
+    filt = BloomRF(layout, _warn=False)
     keys = jnp.asarray(keys, jnp.uint32)
     B = keys.shape[0]
     U = layout.total_u32

@@ -68,7 +68,7 @@ def range_probe_resident(layout: FilterLayout, state: jax.Array, lo, hi,
                          tile: int = DEFAULT_TILE, interpret: bool = True):
     """Batched range probe with the filter resident in VMEM."""
     _check_range_kernel_layout(layout)
-    filt = BloomRF(layout)
+    filt = BloomRF(layout, _warn=False)
     lo = jnp.asarray(lo, jnp.uint32)
     hi = jnp.asarray(hi, jnp.uint32)
     B = lo.shape[0]
@@ -166,7 +166,7 @@ def range_probe_partitioned(layout: FilterLayout, state: jax.Array, lo, hi,
     matrix and run the engine's combine.
     """
     _check_range_kernel_layout(layout)
-    filt = BloomRF(layout)
+    filt = BloomRF(layout, _warn=False)
     eng = filt.engine
     lo = jnp.asarray(lo, jnp.uint32)
     hi = jnp.asarray(hi, jnp.uint32)

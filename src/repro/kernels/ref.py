@@ -26,22 +26,22 @@ def check_kernel_layout(layout: FilterLayout) -> None:
 
 def point_ref(layout: FilterLayout, state: jax.Array, keys: jax.Array):
     check_kernel_layout(layout)
-    return BloomRF(layout).point_reference(state, keys)
+    return BloomRF(layout, _warn=False).point_reference(state, keys)
 
 
 def range_ref(layout: FilterLayout, state: jax.Array, lo: jax.Array,
               hi: jax.Array):
     check_kernel_layout(layout)
-    return BloomRF(layout).range_reference(state, lo, hi)
+    return BloomRF(layout, _warn=False).range_reference(state, lo, hi)
 
 
 def insert_ref(layout: FilterLayout, state: jax.Array, keys: jax.Array):
     check_kernel_layout(layout)
-    return BloomRF(layout).insert(state, keys)
+    return BloomRF(layout, _warn=False).insert(state, keys)
 
 
 def positions_ref(layout: FilterLayout, keys: jax.Array):
     """(B, P) bit positions probed/set per key (kernel-probe decomposition)."""
     check_kernel_layout(layout)
-    f = BloomRF(layout)
+    f = BloomRF(layout, _warn=False)
     return jax.vmap(f._positions_one)(jnp.asarray(keys, f.kdtype))

@@ -44,6 +44,7 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import codecs
 from ..dist.tenant_bank import TenantFilterBank
 from ..store import Store
 
@@ -54,7 +55,10 @@ _SES_BITS = 16
 
 
 def pack_key(session: int, chunk: int) -> int:
-    return ((session & 0xFFFF) << _CHUNK_BITS) | (chunk & 0xFFFF)
+    """(session, chunk) -> packed key via the order-preserving two-attribute
+    codec (``core.codecs.pack2``): the multi-attribute concatenation of
+    paper §8 with a 16-bit low field."""
+    return int(codecs.pack2(session & 0xFFFF, chunk & 0xFFFF, _CHUNK_BITS))
 
 
 class _Segment:
@@ -110,7 +114,7 @@ class PrefixCacheIndex:
 
     def _local_key(self, session, chunk):
         local_ses = (session & 0xFFFF) >> self.nt_bits
-        return (local_ses << _CHUNK_BITS) | (chunk & 0xFFFF)
+        return codecs.pack2(local_ses, chunk, _CHUNK_BITS)
 
     def _bank_for(self, n_entries: int) -> TenantFilterBank:
         """Banks are cached per capacity class (power of two) so segments of
@@ -121,7 +125,7 @@ class PrefixCacheIndex:
                 self.d_seg, self.n_tenants, 1,
                 n_keys_per_tenant=max(cap // self.n_tenants, 1),
                 bits_per_key=self.bits_per_key, delta=6,
-                meta_level=_CHUNK_BITS)
+                meta_level=_CHUNK_BITS, _warn=False)
         return self._banks[cap]
 
     # ------------------------------------------------------------------

@@ -129,7 +129,13 @@ class StoreStats:
 class Store:
     """LSM key-value store with per-run bloomRF filter blocks."""
 
-    def __init__(self, config: Optional[StoreConfig] = None, **kw):
+    def __init__(self, config: Optional[StoreConfig] = None, *,
+                 _warn: bool = True, **kw):
+        if _warn:
+            from .._compat import warn_legacy
+
+            warn_legacy("Store(StoreConfig(...))",
+                        "dtype=..., placement='store', ...")
         self.cfg = config if config is not None else StoreConfig(**kw)
         self.kdtype = key_dtype_for(self.cfg.d)
         self.mem = Memtable()
@@ -162,7 +168,7 @@ class Store:
         kj = jnp.asarray(keys, self.kdtype)
         if self.cfg.use_insert_kernels and layout.d <= 32:
             if layout not in self._ops:
-                self._ops[layout] = FilterOps(layout)
+                self._ops[layout] = FilterOps(layout, _warn=False)
             ops = self._ops[layout]
             return ops.insert(ops.init_state(), kj)
         return _filter_for_layout(layout).build(kj)
@@ -438,7 +444,7 @@ class Store:
     def restore(cls, snap: dict) -> "Store":
         if snap.get("schema") != "bloomrf-store/v1":
             raise ValueError(f"not a store snapshot: {snap.get('schema')!r}")
-        store = cls(StoreConfig(**snap["config"]))
+        store = cls(StoreConfig(**snap["config"]), _warn=False)
         store.levels = [[Run.unpack(enc) for enc in lvl]
                         for lvl in snap["levels"]]
         if not store.levels:

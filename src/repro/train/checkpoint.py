@@ -93,7 +93,7 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, n_shards: int = 4) -> str:
     for s in range(n_shards):
         nkeys = max(len(shard_keys[s]), 1)
         lay = basic_layout(dom, nkeys, bits_per_key=20.0, delta=3)
-        f = BloomRF(lay)
+        f = BloomRF(lay, _warn=False)
         state = f.build(jnp.asarray(shard_keys[s] or [0], jnp.uint32))
         shard_files[s]["__bloomrf__"] = np.asarray(state)
         filt_meta.append({"n_keys": nkeys, "bits_per_key": 20.0, "delta": 3,
@@ -131,7 +131,7 @@ def _shard_filter(sdir, manifest, s):
     lay = basic_layout(meta.get("domain_bits", 32), meta["n_keys"],
                        meta["bits_per_key"], delta=meta["delta"])
     data = np.load(os.path.join(sdir, f"shard_{s:02d}.npz"))
-    return BloomRF(lay), jnp.asarray(data["__bloomrf__"]), data
+    return BloomRF(lay, _warn=False), jnp.asarray(data["__bloomrf__"]), data
 
 
 def restore_checkpoint(ckpt_dir: str, step: int, like):
