@@ -29,7 +29,8 @@ SMOKE = {
     "fig12": {"N": 20_000, "Q": 2_000, "MIX_OPS": 4_000, "LOOKUPS": 10_000},
     "kernels": {"N": 100_000, "Q": 50_000},
     "store": {"N": 20_000, "OPS": 2_000, "MEMTABLE": 800, "SCAN_BATCH": 256,
-              "BACKENDS": ("bloomrf", "none", "prefix_bloom")},
+              "BACKENDS": ("bloomrf", "none", "prefix_bloom"),
+              "CHURN_OPS": 8_000},
 }
 
 

@@ -26,6 +26,14 @@ only), plus host-side baselines from ``repro.filters``; the ``float``
 distribution runs bloomrf vs none only (the CI gate compares its pruning
 against the committed uniform row).
 
+The ``store/churn/*`` rows measure filters under deletion churn
+(DESIGN.md §12): load, measure the absent-key FPR, run a 50/50
+put/delete phase over the same seeded op stream, re-measure.
+``fpr_drift`` (post/pre ratio) is gated in CI for the ``deletable``
+mutability — its purge/promote compaction must keep drift bounded and
+no worse than the ``insert_only`` control that keeps every dead key's
+bits forever.
+
 Run standalone (full sizes; the nightly row):
   PYTHONPATH=src python -m benchmarks.store_bench --json BENCH_STORE.json
 or at CI sizes via ``--smoke`` / ``python -m benchmarks.run --smoke``.
@@ -58,6 +66,10 @@ NEAR_MISS = 0.2      # share of scans starting just past a stored key
 DISTS = ("uniform", "zipf", "float")
 BACKENDS = ("bloomrf", "none", "prefix_bloom", "rosetta")
 FLOAT_BACKENDS = ("bloomrf", "none")
+CHURN_OPS = 40_000   # churn-phase op count
+CHURN_DELETE_FRAC = 0.6   # delete-heavy churn (the FPR-drift stressor)
+CHURN_PURGE_DEAD = 0.15   # deletable: dead fraction forcing a purge rebuild
+CHURN_MUTABILITIES = ("deletable", "insert_only")
 
 
 def _f32_keys(codes: np.ndarray, rng) -> np.ndarray:
@@ -191,6 +203,76 @@ def metrics(handle, us_per_op: float) -> dict:
     }
 
 
+def _filter_positive_rate(store, keys: np.ndarray) -> float:
+    """Fraction of absent keys the (fence AND filter) masks let through."""
+    fence, filt = store.probe_runs(keys, keys, point=True)
+    return float((fence & filt).any(axis=1).mean())
+
+
+def run_churn_one(mutability: str, seed: int = 0x57043) -> tuple:
+    """(typed store handle, churn metrics dict): load N keys, measure the
+    absent-key FPR, run a 50/50 put/delete churn phase, re-measure.
+
+    ``fpr_drift`` (post/pre FPR ratio) is the headline: the deletable
+    store's purge/promote compaction washes dead keys' bits out, so its
+    drift must stay bounded while the insert-only control accumulates
+    every ever-inserted key forever.  The same seeded op stream drives
+    both mutabilities, so the rows are directly comparable.
+    """
+    rng = np.random.default_rng(seed)
+    handle = open_filter(FilterSpec(
+        dtype="u32", placement="store", memtable_limit=MEMTABLE,
+        level0_runs=LEVEL0, fanout=FANOUT, bits_per_key=BPK, delta=6,
+        mutability=mutability, purge_dead_frac=CHURN_PURGE_DEAD))
+    data = np.unique(_keys(N, "uniform", rng))
+    live = {}
+    for i, k in enumerate(data):
+        handle.put(int(k), i)
+        live[int(k)] = i
+    handle.flush()
+    absent = rng.integers(0, 1 << 31, 50_000, dtype=np.uint64)
+    absent = absent[~np.isin(absent, data)]
+    fpr0 = _filter_positive_rate(handle.store, absent)
+
+    order = list(live)          # deletion order fixed by the seeded load
+    drops = rng.random(CHURN_OPS) < CHURN_DELETE_FRAC
+    t0 = time.perf_counter()
+    deleted = 0
+    for i in range(CHURN_OPS):
+        if drops[i] and deleted < len(order):
+            handle.delete(order[deleted])
+            del live[order[deleted]]
+            deleted += 1
+        else:
+            k = int(rng.integers(0, 1 << 31))
+            handle.put(k, i)
+            live[k] = i
+    handle.flush()
+    dt = time.perf_counter() - t0
+    us = dt / max(CHURN_OPS, 1) * 1e6
+
+    still_absent = absent[~np.isin(absent,
+                                   np.fromiter(live, np.uint64, len(live)))]
+    fpr1 = _filter_positive_rate(handle.store, still_absent)
+    # post-churn scan pruning (the runs-probed-per-scan gate)
+    lo = _scan_starts(SCAN_BATCH, "uniform", data, rng)
+    handle.scan_many(lo, _scan_bounds(lo, "uniform"))
+    s = handle.stats
+    m = {
+        "fpr_before": fpr0,
+        "fpr_after": fpr1,
+        "fpr_drift": fpr1 / max(fpr0, 1e-9),
+        "runs_probed_per_scan": s.runs_probed_per_scan,
+        "runs_live": handle.n_runs,
+        "or_merges": s.or_merges,
+        "rebuild_merges": s.rebuild_merges,
+        "promote_merges": s.promote_merges,
+        "purge_rebuilds": s.purge_rebuilds,
+        "us_per_op": us,
+    }
+    return handle, m
+
+
 def run(section: dict | None = None):
     """Bench rows (+ per-setting metrics into ``section`` when given)."""
     rows = []
@@ -207,6 +289,17 @@ def run(section: dict | None = None):
                 f"fp={m['scan_fp_read_rate']:.3f};"
                 f"runs={m['runs_live']};"
                 f"bytes_saved={m['bytes_not_read_frac']:.3f}"))
+    for mutability in CHURN_MUTABILITIES:
+        _, m = run_churn_one(mutability)
+        if section is not None:
+            section[f"churn/{mutability}"] = m
+        rows.append(emit(
+            f"store/churn/{mutability}", m["us_per_op"],
+            f"fpr_drift={m['fpr_drift']:.3f};"
+            f"fpr={m['fpr_after']:.4f};"
+            f"runs/scan={m['runs_probed_per_scan']:.3f};"
+            f"promote={m['promote_merges']};"
+            f"purge={m['purge_rebuilds']}"))
     return rows
 
 

@@ -51,6 +51,7 @@ _DTYPES = ("u8", "u16", "u32", "u64", "f32", "f64", "str", "multiattr")
 _PLACEMENTS = ("single", "bank", "tenant", "store")
 _BACKENDS = ("auto", "xla", "resident", "partitioned", "stacked")
 _TUNINGS = ("auto", "basic", "advised")
+_MUTABILITIES = ("insert_only", "deletable", "ttl")
 
 #: range budget (log2) up to which the tuning-free basic layout is advised
 _BASIC_RANGE_LOG2 = 14
@@ -245,11 +246,16 @@ class FilterSpec:
     point_weight: float = 1.0               # advisor's point-vs-range weight
     chunk: int = 1 << 18                    # host-side probe chunking
     seed: int = 0x0B100F11
+    # churn model (core/dynamic.py): how inserted keys may leave again
+    mutability: str = "insert_only"         # insert_only|deletable|ttl
+    generations: int = 4                    # ttl: retained TTL windows (>= 2)
     # store placement knobs (StoreConfig)
     store_backend: str = "bloomrf"
     memtable_limit: int = 4096
     fanout: int = 4
     level0_runs: int = 4
+    purge_dead_frac: float = 0.25           # deletable store: dead fraction
+                                            # forcing a purge rebuild
 
     def __post_init__(self):
         def bad(msg):
@@ -296,6 +302,25 @@ class FilterSpec:
             bad("tuning='advised' builds exact-bitmap layouts, which only "
                 "the single placement's XLA path can probe (the stacked "
                 "plan and the kernels are hashed-layout only)")
+        if self.mutability not in _MUTABILITIES:
+            bad(f"mutability must be one of {_MUTABILITIES}, "
+                f"got {self.mutability!r}")
+        if self.mutability == "deletable" \
+                and self.placement not in ("single", "store"):
+            bad("mutability='deletable' needs counting lanes (single) or "
+                "compaction purges (store); bank/tenant placements age out "
+                "keys with mutability='ttl' instead")
+        if self.mutability == "ttl" \
+                and self.placement not in ("single", "tenant"):
+            bad("mutability='ttl' keeps generation lanes on the resident "
+                "state (single/tenant); the store expires via tombstones "
+                "plus mutability='deletable' compaction purges")
+        if self.generations < 2:
+            bad(f"generations must be >= 2 (current + retiring), "
+                f"got {self.generations}")
+        if not (0.0 < self.purge_dead_frac <= 1.0):
+            bad(f"purge_dead_frac must be in (0, 1], "
+                f"got {self.purge_dead_frac}")
 
     # -- derived sizing ---------------------------------------------------
     def resolved_bits_per_key(self) -> float:
@@ -399,13 +424,9 @@ class SingleFilter(_Handle):
     def __init__(self, spec: FilterSpec, codec: _Codec):
         import jax
 
-        from .core.bloomrf import BloomRF
-        from .kernels.ops import FilterOps
-
         super().__init__(spec, codec)
         require_x64(codec.d)
-        self.layout, self.tuning = _plan_layout(spec, codec)
-        self.filter = BloomRF(self.layout, _warn=False)
+        layout, self.tuning = _plan_layout(spec, codec)
         backend = spec.backend
         if backend == "auto":
             # kernels only apply to hashed 32-bit layouts, and off-TPU they
@@ -413,18 +434,40 @@ class SingleFilter(_Handle):
             # XLA engine there and dispatches to the kernels on real TPUs
             on_tpu = jax.default_backend() == "tpu"
             backend = "kernels" if (on_tpu and codec.d <= 32
-                                    and not self.layout.has_exact) else "xla"
-        self.ops = None
-        if backend in ("kernels", "resident", "partitioned"):
-            budget = None
-            if backend == "resident":
-                budget = max(self.layout.total_u32, 1)
-            elif backend == "partitioned":
-                budget = 0
-            self.ops = FilterOps(self.layout, vmem_budget_u32=budget,
-                                 _warn=False)
+                                    and not layout.has_exact) else "xla"
         self.backend = backend
-        self.state = self.filter.init_state()
+        self._bind_layout(layout)
+        self.counts = None      # deletable: per-bit reference counters
+        self.gens = None        # ttl: generation lanes
+        self._state = self.filter.init_state()
+        if spec.mutability == "deletable":
+            from .core.dynamic import CountingLanes
+
+            self.counts = CountingLanes(layout.total_bits)
+        elif spec.mutability == "ttl":
+            from .core.dynamic import Generations
+
+            self.gens = Generations(self.filter.init_state, spec.generations)
+
+    def _bind_layout(self, layout) -> None:
+        """(Re)build the filter, kernel ops, and jitted entry points for
+        ``layout`` — shared by ``__init__`` and :meth:`grow`."""
+        import jax
+
+        from .core.bloomrf import BloomRF
+        from .kernels.ops import FilterOps
+
+        self.layout = layout
+        self.filter = BloomRF(layout, _warn=False)
+        self.ops = None
+        if self.backend in ("kernels", "resident", "partitioned"):
+            budget = None
+            if self.backend == "resident":
+                budget = max(layout.total_u32, 1)
+            elif self.backend == "partitioned":
+                budget = 0
+            self.ops = FilterOps(layout, vmem_budget_u32=budget,
+                                 _warn=False)
         if self.ops is not None:
             self._point = self.ops.point
             self._range = self.ops.range
@@ -433,6 +476,20 @@ class SingleFilter(_Handle):
             self._point = jax.jit(self.filter.point)
             self._range = jax.jit(self.filter.range)
             self._insert = jax.jit(self.filter.insert)
+        self._posf = jax.jit(jax.vmap(self.filter._positions_one))
+
+    # -- state (TTL filters probe the OR-collapse of their generations) ---
+    @property
+    def state(self):
+        return self.gens.collapsed if self.gens is not None else self._state
+
+    @state.setter
+    def state(self, value):
+        if self.gens is not None:
+            raise AttributeError(
+                "a TTL filter's state is generation-managed; insert through "
+                "insert() and age through advance_generation()")
+        self._state = value
 
     # -- mutation ---------------------------------------------------------
     def insert(self, keys) -> None:
@@ -441,8 +498,62 @@ class SingleFilter(_Handle):
 
         kd = self.filter.kdtype
         for s in range(0, len(codes), self.spec.chunk):
-            self.state = self._insert(
-                self.state, jnp.asarray(codes[s:s + self.spec.chunk], kd))
+            cj = jnp.asarray(codes[s:s + self.spec.chunk], kd)
+            if self.gens is not None:
+                self.gens.insert(self._insert, cj)
+            else:
+                self._state = self._insert(self._state, cj)
+            if self.counts is not None:
+                self.counts.add(np.asarray(self._posf(cj)))
+
+    def delete(self, keys) -> None:
+        """Remove previously inserted keys (``mutability='deletable'``).
+
+        Decrements the counting lanes; bits whose counters drain to zero
+        are cleared, so deleted keys stop costing false positives (up to
+        counter saturation).  Deleting keys never inserted is a contract
+        violation, as with any counting Bloom."""
+        if self.counts is None:
+            raise ValueError(
+                "delete() needs FilterSpec(mutability='deletable')")
+        from .core.dynamic import clear_bits
+
+        import jax.numpy as jnp
+
+        codes = self.codec.encode_insert(keys)
+        kd = self.filter.kdtype
+        for s in range(0, len(codes), self.spec.chunk):
+            cj = jnp.asarray(codes[s:s + self.spec.chunk], kd)
+            zeroed = self.counts.remove(np.asarray(self._posf(cj)))
+            self._state = clear_bits(self._state, zeroed)
+
+    def advance_generation(self) -> None:
+        """Close the current TTL window (``mutability='ttl'``): the oldest
+        generation's keys stop costing false positives; keys not
+        re-inserted within ``spec.generations`` windows expire."""
+        if self.gens is None:
+            raise ValueError(
+                "advance_generation() needs FilterSpec(mutability='ttl')")
+        self.gens.advance()
+
+    def grow(self, factor: int = 4) -> None:
+        """In-place capacity promotion (``core/dynamic.py``): segment-tile
+        the state onto a ``factor``-times larger layout with no key
+        re-hashing — every inserted key keeps probing positive."""
+        from .core.dynamic import promote_layout, promote_state
+
+        old = self.layout
+        new = promote_layout(old, factor)
+        self._bind_layout(new)
+        if self.gens is not None:
+            self.gens = self.gens.map(
+                lambda st: promote_state(st, old, new),
+                zero_fn=self.filter.init_state)
+        else:
+            self._state = promote_state(self._state, old, new)
+        if self.counts is not None:
+            self.counts = self.counts.promoted(old, new)
+        self.spec = dataclasses.replace(self.spec, n=self.spec.n * factor)
 
     # -- probes -----------------------------------------------------------
     def point(self, qs) -> np.ndarray:
@@ -528,8 +639,26 @@ class TenantFilter(_Handle):
             max(spec.n * codec.codes_per_key, 1),
             spec.resolved_bits_per_key(), delta=delta, seed=spec.seed,
             _warn=False)
-        self.state = self.bank.init_state()
-        self.meta = self.bank.init_meta()
+        self.gens = None        # ttl: generation lanes over (state, meta)
+        self._state = self.bank.init_state()
+        self._meta = self.bank.init_meta()
+        if spec.mutability == "ttl":
+            from .core.dynamic import Generations
+
+            self.gens = Generations(
+                lambda: (self.bank.init_state(), self.bank.init_meta()),
+                spec.generations)
+
+    # -- state (TTL filters probe the OR-collapse of their generations) ---
+    @property
+    def state(self):
+        return self.gens.collapsed[0] if self.gens is not None \
+            else self._state
+
+    @property
+    def meta(self):
+        return self.gens.collapsed[1] if self.gens is not None \
+            else self._meta
 
     def _tiled_tenants(self, tenants, n_codes: int):
         """Tenant ids aligned 1:1 with the encoded codes: a scalar tenant
@@ -552,8 +681,43 @@ class TenantFilter(_Handle):
         for s in range(0, len(codes), self.spec.chunk):
             cj = jnp.asarray(codes[s:s + self.spec.chunk], self.bank.bank.kdtype)
             tj = jnp.asarray(t[s:s + self.spec.chunk])
-            self.state = self.bank.insert(self.state, tj, cj)
-            self.meta = self.bank.insert_meta(self.meta, tj, cj)
+            if self.gens is not None:
+                self.gens.insert(
+                    lambda sm, tt, cc: (self.bank.insert(sm[0], tt, cc),
+                                        self.bank.insert_meta(sm[1], tt, cc)),
+                    tj, cj)
+            else:
+                self._state = self.bank.insert(self._state, tj, cj)
+                self._meta = self.bank.insert_meta(self._meta, tj, cj)
+
+    def advance_generation(self) -> None:
+        """Close the current TTL window (``mutability='ttl'``): tenants'
+        cold keys expire after ``spec.generations`` windows without a
+        re-insert and stop costing false positives — no sweeps."""
+        if self.gens is None:
+            raise ValueError(
+                "advance_generation() needs FilterSpec(mutability='ttl')")
+        self.gens.advance()
+
+    def grow(self, factor: int = 4) -> None:
+        """In-place capacity promotion of every tenant row (and the meta
+        rows, and every TTL generation): segment tiling, no key re-hash."""
+        from .core.dynamic import promote_state
+
+        old = self.bank
+        if self.gens is not None:
+            nb = old.grown(factor)
+            ol, nl = old.bank.layout, nb.bank.layout
+            oml, nml = old.meta_layout, nb.meta_layout
+            self.gens = self.gens.map(
+                lambda sm: (promote_state(sm[0], ol, nl),
+                            promote_state(sm[1], oml, nml)),
+                zero_fn=lambda: (nb.init_state(), nb.init_meta()))
+            self.bank = nb
+        else:
+            self.bank, self._state, self._meta = old.promote(
+                self._state, self._meta, factor)
+        self.spec = dataclasses.replace(self.spec, n=self.spec.n * factor)
 
     def point(self, tenants, qs) -> np.ndarray:
         import jax.numpy as jnp
@@ -611,7 +775,9 @@ class TypedStore(_Handle):
             bits_per_key=spec.resolved_bits_per_key(),
             delta=min(delta, codec.d), fanout=spec.fanout,
             level0_runs=spec.level0_runs,
-            filter_backend=spec.store_backend, seed=spec.seed), _warn=False)
+            filter_backend=spec.store_backend, seed=spec.seed,
+            mutability=spec.mutability,
+            purge_dead_frac=spec.purge_dead_frac), _warn=False)
         self._buckets = self.codec.name == "str"
 
     # -- write path -------------------------------------------------------
@@ -638,6 +804,16 @@ class TypedStore(_Handle):
                 self.store.delete(code)
         else:
             self.store.delete(code)
+
+    def delete_many(self, keys) -> None:
+        """Batched deletes: one memtable-flush decision for the whole
+        batch (``Store.delete_many``), so eviction sweeps never cascade
+        flushes/compactions mid-batch."""
+        if self._buckets:
+            for k in keys:      # buckets need per-key read-modify-write
+                self.delete(k)
+            return
+        self.store.delete_many(self.codec.encode_point(keys))
 
     def flush(self) -> None:
         self.store.flush()

@@ -4,6 +4,9 @@ from .codecs import (float32_to_u32, float64_to_u64, multiattr_insert_codes,
                      multiattr_range_for_a_eq_b_range, pack2, pack2x32,
                      string_point_code, string_range_bounds, u32_to_float32,
                      u64_to_float64, unpack2, unpack2x32)
+from .dynamic import (CountingLanes, DeletableBloomRF, Generations,
+                      clear_bits, promote_counts, promote_layout,
+                      promote_state, promotion_factors)
 from .engine import (PointPlan, ProbeEngine, RangePlan, StackedProbe,
                      stacked_probe)
 from .hashing import dyadic_prefixes, key_dtype_for
@@ -21,6 +24,15 @@ __all__ = [
     "stacked_probe",
     "dyadic_prefixes",
     "key_dtype_for",
+    # dynamic-filter machinery: deletion, aging, in-place growth
+    "CountingLanes",
+    "DeletableBloomRF",
+    "Generations",
+    "clear_bits",
+    "promote_counts",
+    "promote_layout",
+    "promote_state",
+    "promotion_factors",
     # order-preserving codecs (paper §8) — the typed façade's key layer
     "float64_to_u64",
     "u64_to_float64",

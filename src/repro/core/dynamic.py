@@ -1,0 +1,374 @@
+"""Dynamic-filter machinery: deletion, aging, and in-place capacity growth.
+
+bloomRF as published is insert-only.  This module layers three orthogonal,
+composable mechanisms on the flat ``uint32`` lane state without touching the
+probe path (the one-fused-gather invariant of the engine is preserved — the
+probed bitmap stays a plain ``uint32[total_u32]`` vector in every case):
+
+* **Counting lanes** (:class:`CountingLanes`, :class:`DeletableBloomRF`) —
+  a host-side ``uint8`` reference counter per bit beside the probed bitmap.
+  Deleting a previously-inserted key decrements its positions; a counter that
+  reaches zero clears its bit (:func:`clear_bits`).  Counters saturate at 255
+  and *freeze*: a frozen bit is never cleared, trading a little FPR for
+  unconditional false-negative freedom.
+
+* **Generation lanes** (:class:`Generations`) — TTL/aging as ``G``
+  OR-composable copies of the filter state.  Inserts land in the current
+  generation; probes see the OR-collapse of all generations (valid because
+  bloomRF state is union-closed: ``filter(A ∪ B) == filter(A) | filter(B)``
+  under one layout).  ``advance()`` retires the oldest generation by zeroing
+  it, so expired keys stop costing false positives.  A key whose generation
+  retired and that was not re-inserted is *expired by contract* — reporting
+  it absent is correct, not a false negative.
+
+* **In-place capacity promotion** (:func:`promotion_factors`,
+  :func:`promote_layout`, :func:`promote_state`) — grow a filter to a larger
+  layout by tiling each hashed segment an integer number of times, with no
+  access to the original keys.  Correctness rests on the position function
+  (``core/bloomrf.py``): a layer's word index is ``h % nwords``, and for any
+  integer factor ``f``, ``(h mod f*N) mod N == h mod N`` — so every bit set
+  in the old segment lands (among its ``f`` tiled copies) exactly where the
+  new layout would have hashed it.  Old keys keep probing positive (zero
+  false negatives); the extra copies are junk bits that only add FPR, which
+  the next key-rebuilding compaction washes out.  Promotion distributes over
+  OR, so the store's same-class ``bitwise_or`` union invariant extends to
+  promoted runs: ``promote(a | b) == promote(a) | promote(b)``.
+"""
+from __future__ import annotations
+
+from functools import reduce
+from typing import Callable, List, Optional
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hashing import key_dtype_for
+from .layout import FilterLayout
+
+__all__ = [
+    "promotion_factors",
+    "promote_layout",
+    "promote_state",
+    "promote_counts",
+    "clear_bits",
+    "CountingLanes",
+    "Generations",
+    "DeletableBloomRF",
+]
+
+
+# ---------------------------------------------------------------------------
+# in-place capacity promotion
+# ---------------------------------------------------------------------------
+
+def promotion_factors(old: FilterLayout,
+                      new: FilterLayout) -> Optional[tuple]:
+    """Per-segment tiling factors promoting ``old`` state to ``new``, or
+    ``None`` when the pair is not promotion-compatible.
+
+    Compatibility demands that every position the old layout computes stays
+    valid (modulo segment tiling) under the new one:
+
+    * same domain and hash seed (seeds are a deterministic stream, so equal
+      seeds + equal replica width give prefix-equal seed tables);
+    * ``new`` keeps a *prefix* of the old layers (``new.k <= old.k`` with
+      equal deltas/replicas/segment assignment on the prefix) — larger
+      capacity classes legitimately drop saturated top layers, whose old
+      bits become harmless junk;
+    * segment-for-segment, the new allocation is an integer multiple of the
+      old one (an exact-bitmap segment is identity-mapped and must match
+      exactly, factor 1).
+    """
+    if old.d != new.d or old.seed != new.seed:
+        return None
+    if new.k > old.k:
+        return None
+    if new.deltas != old.deltas[:new.k]:
+        return None
+    if new.replicas != old.replicas[:new.k]:
+        return None
+    if new.seg_of_layer != old.seg_of_layer[:new.k]:
+        return None
+    if max(old.replicas) != max(new.replicas):
+        # seed tables reshape to (k, rmax); different rmax scrambles rows
+        return None
+    if len(new.seg_bits) != len(old.seg_bits):
+        return None
+    if old.exact_seg != new.exact_seg:
+        return None
+    factors = []
+    for s in range(len(old.seg_bits)):
+        ob = old.seg_alloc_bits[s]
+        nb = new.seg_alloc_bits[s]
+        if nb % ob != 0:
+            return None
+        f = nb // ob
+        if old.exact_seg is not None and s == old.exact_seg:
+            # identity-mapped bitmap: sizes (hence top levels) must agree
+            if f != 1 or old.top_level != new.top_level:
+                return None
+        factors.append(f)
+    return tuple(factors)
+
+
+def promote_layout(layout: FilterLayout, factor: int = 4) -> FilterLayout:
+    """The canonical always-promotable growth target: same layers, every
+    hashed segment scaled by ``factor``.
+
+    Scales the *allocated* (alignment-rounded) sizes so the new allocation is
+    exactly ``factor`` times the old one — ``promotion_factors`` on the pair
+    returns ``(factor, ...)`` by construction.  Exact-bitmap segments keep
+    their identity size.
+    """
+    if factor < 1:
+        raise ValueError(f"promotion factor must be >= 1, got {factor}")
+    seg_bits = []
+    for s, alloc in enumerate(layout.seg_alloc_bits):
+        if layout.exact_seg is not None and s == layout.exact_seg:
+            seg_bits.append(layout.seg_bits[s])
+        else:
+            seg_bits.append(alloc * factor)
+    return dataclasses.replace(layout, seg_bits=tuple(seg_bits))
+
+
+def promote_state(state: jax.Array, old: FilterLayout,
+                  new: FilterLayout) -> jax.Array:
+    """Map ``uint32`` filter state from ``old`` to ``new`` by segment tiling.
+
+    Supports leading batch dims (tenant banks carry ``[T, S, U]`` states).
+    Raises ``ValueError`` for incompatible pairs — callers that want a
+    fallback should check :func:`promotion_factors` first.
+    """
+    factors = promotion_factors(old, new)
+    if factors is None:
+        raise ValueError("layouts are not promotion-compatible")
+    state = jnp.asarray(state)
+    if state.shape[-1] != old.total_u32:
+        raise ValueError(
+            f"state has {state.shape[-1]} lanes, old layout {old.total_u32}")
+    out = jnp.zeros(state.shape[:-1] + (new.total_u32,), jnp.uint32)
+    for s, f in enumerate(factors):
+        o_lo, o_n = old.seg_off_bits[s] // 32, old.seg_alloc_bits[s] // 32
+        n_lo, n_n = new.seg_off_bits[s] // 32, new.seg_alloc_bits[s] // 32
+        reps = (1,) * (state.ndim - 1) + (f,)
+        tiled = jnp.tile(state[..., o_lo:o_lo + o_n], reps)
+        out = out.at[..., n_lo:n_lo + n_n].set(tiled)
+    return out
+
+
+def promote_counts(counts: np.ndarray, old: FilterLayout,
+                   new: FilterLayout) -> np.ndarray:
+    """Tile counting lanes alongside :func:`promote_state`.
+
+    Each tiled copy inherits the full counter: after promotion a key's
+    position resolves to exactly one copy, whose counter still covers its
+    contribution; the other copies decay into the same junk bits the state
+    tiling produces (cleared only if their counters drain, never causing a
+    false negative).
+    """
+    factors = promotion_factors(old, new)
+    if factors is None:
+        raise ValueError("layouts are not promotion-compatible")
+    out = np.zeros(new.total_bits, np.uint8)
+    for s, f in enumerate(factors):
+        o_lo, o_n = old.seg_off_bits[s], old.seg_alloc_bits[s]
+        n_lo = new.seg_off_bits[s]
+        out[n_lo:n_lo + o_n * f] = np.tile(counts[o_lo:o_lo + o_n], f)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# bit clearing + counting lanes (deletable filters)
+# ---------------------------------------------------------------------------
+
+def clear_bits(state: jax.Array, pos) -> jax.Array:
+    """Clear the given bit positions in packed ``uint32`` lane state."""
+    pos = np.asarray(pos, np.int64).reshape(-1)
+    if pos.size == 0:
+        return state
+    state = jnp.asarray(state)
+    mask = np.zeros(state.shape[-1], np.uint32)
+    np.bitwise_or.at(mask, pos >> 5,
+                     np.uint32(1) << (pos & 31).astype(np.uint32))
+    return state & jnp.asarray(~mask)
+
+
+class CountingLanes:
+    """Host-side ``uint8`` reference counters, one per filter bit.
+
+    The probed bitmap stays untouched — counters live beside it and only
+    decide *when* a bit may be cleared.  Counters saturate at
+    :attr:`SATURATE` and freeze there: a saturated counter is never
+    decremented and its bit is never cleared (conservative positives, never
+    false negatives).
+    """
+
+    SATURATE = 255
+
+    __slots__ = ("counts",)
+
+    def __init__(self, total_bits: int, counts: Optional[np.ndarray] = None):
+        if counts is not None:
+            counts = np.asarray(counts, np.uint8)
+            if counts.shape != (total_bits,):
+                raise ValueError("counter/total_bits shape mismatch")
+            self.counts = counts.copy()
+        else:
+            self.counts = np.zeros(total_bits, np.uint8)
+
+    def add(self, pos) -> None:
+        """Count one contribution per occurrence in ``pos`` (duplicates from
+        colliding keys in one batch each count)."""
+        pos = np.asarray(pos, np.int64).reshape(-1)
+        if pos.size == 0:
+            return
+        upos, cnt = np.unique(pos, return_counts=True)
+        cur = self.counts[upos].astype(np.int64)
+        self.counts[upos] = np.minimum(cur + cnt, self.SATURATE).astype(np.uint8)
+
+    def remove(self, pos) -> np.ndarray:
+        """Decrement contributions; return the positions that drained to
+        zero (whose bits the caller may now clear).  Saturated counters are
+        frozen and never drain."""
+        pos = np.asarray(pos, np.int64).reshape(-1)
+        if pos.size == 0:
+            return pos
+        upos, cnt = np.unique(pos, return_counts=True)
+        cur = self.counts[upos].astype(np.int64)
+        frozen = cur >= self.SATURATE
+        new = np.maximum(cur - cnt, 0)
+        new[frozen] = self.SATURATE
+        self.counts[upos] = new.astype(np.uint8)
+        return upos[(new == 0) & (cur > 0)]
+
+    def promoted(self, old: FilterLayout, new: FilterLayout) -> "CountingLanes":
+        return CountingLanes(new.total_bits,
+                             counts=promote_counts(self.counts, old, new))
+
+
+# ---------------------------------------------------------------------------
+# generation lanes (TTL / aging)
+# ---------------------------------------------------------------------------
+
+class Generations:
+    """``G`` OR-composable copies of arbitrary filter state (any pytree of
+    ``uint32`` arrays) giving sweep-free TTL semantics.
+
+    Inserts go to the current generation; probes read :attr:`collapsed`
+    (the element-wise OR of all generations — sound because bloomRF state is
+    union-closed).  :meth:`advance` rotates to the next slot and zeroes it,
+    retiring whatever the oldest generation still held: a key inserted into
+    the current generation is dropped by the ``n_generations``-th subsequent
+    advance (sooner if its slot comes up earlier in the rotation), after
+    which it stops costing false positives.  Expiry is the contract — a retired key probing absent
+    is correct behaviour, not a false negative.
+    """
+
+    __slots__ = ("zero_fn", "gens", "current", "_collapsed", "advances")
+
+    def __init__(self, zero_fn: Callable[[], object], n_generations: int = 4):
+        if n_generations < 2:
+            raise ValueError(
+                f"need >= 2 generations for aging, got {n_generations}")
+        self.zero_fn = zero_fn
+        self.gens: List[object] = [zero_fn() for _ in range(n_generations)]
+        self.current = 0
+        self.advances = 0
+        self._collapsed = None
+
+    @property
+    def n_generations(self) -> int:
+        return len(self.gens)
+
+    def insert(self, fn: Callable, *args) -> None:
+        """Apply ``fn(current_state, *args) -> new_state`` to the current
+        generation."""
+        self.gens[self.current] = fn(self.gens[self.current], *args)
+        self._collapsed = None
+
+    @property
+    def collapsed(self):
+        """OR of all generations — the state every probe should read."""
+        if self._collapsed is None:
+            self._collapsed = reduce(
+                lambda a, b: jax.tree_util.tree_map(jnp.bitwise_or, a, b),
+                self.gens)
+        return self._collapsed
+
+    def advance(self) -> None:
+        """Retire the oldest generation (zero it) and make it current."""
+        self.current = (self.current + 1) % len(self.gens)
+        self.gens[self.current] = self.zero_fn()
+        self.advances += 1
+        self._collapsed = None
+
+    def map(self, fn: Callable,
+            zero_fn: Optional[Callable] = None) -> "Generations":
+        """Rebuild with ``fn`` applied to every generation (e.g. promotion
+        to a larger layout).  Pass the new shape's ``zero_fn`` whenever
+        ``fn`` changes the state shape."""
+        out = Generations.__new__(Generations)
+        out.zero_fn = zero_fn if zero_fn is not None else self.zero_fn
+        out.gens = [fn(g) for g in self.gens]
+        out.current = self.current
+        out.advances = self.advances
+        out._collapsed = None
+        return out
+
+
+# ---------------------------------------------------------------------------
+# deletable filter facade over BloomRF
+# ---------------------------------------------------------------------------
+
+class DeletableBloomRF:
+    """BloomRF plus counting lanes: supports ``delete`` of previously
+    inserted keys.
+
+    The probed state is the same flat ``uint32`` vector as plain BloomRF —
+    ``point``/``range`` delegate unchanged, so the engine's one-fused-gather
+    property and all kernels keep working.  Deleting a key that was never
+    inserted (or inserted fewer times than deleted) is a contract violation
+    and may corrupt the filter, exactly as with classic counting Blooms.
+    """
+
+    def __init__(self, layout: FilterLayout):
+        from .bloomrf import BloomRF
+
+        self.layout = layout
+        self.filter = BloomRF(layout, _warn=False)
+        self.counts = CountingLanes(layout.total_bits)
+        self.kdtype = key_dtype_for(layout.d)
+        self._posf = jax.jit(jax.vmap(self.filter._positions_one))
+
+    def init_state(self) -> jax.Array:
+        return self.filter.init_state()
+
+    def _positions(self, keys) -> np.ndarray:
+        keys = jnp.atleast_1d(jnp.asarray(keys, self.kdtype))
+        return np.asarray(self._posf(keys)).reshape(-1)
+
+    def insert(self, state: jax.Array, keys) -> jax.Array:
+        pos = self._positions(keys)
+        self.counts.add(pos)
+        return self.filter.scatter_or(
+            state, jnp.asarray(pos, self.filter.pos_dtype))
+
+    def delete(self, state: jax.Array, keys) -> jax.Array:
+        zeroed = self.counts.remove(self._positions(keys))
+        return clear_bits(state, zeroed)
+
+    def point(self, state: jax.Array, ys) -> jax.Array:
+        return self.filter.point(state, ys)
+
+    def range(self, state: jax.Array, lo, hi) -> jax.Array:
+        return self.filter.range(state, lo, hi)
+
+    def promoted(self, new_layout: FilterLayout,
+                 state: jax.Array) -> tuple:
+        """(new DeletableBloomRF, promoted state) under ``new_layout``."""
+        out = DeletableBloomRF(new_layout)
+        out.counts = self.counts.promoted(self.layout, new_layout)
+        return out, promote_state(state, self.layout, new_layout)

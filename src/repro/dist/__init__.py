@@ -16,7 +16,8 @@ from .compression import (ef_compress, ef_init, elias_fano_decode,
 from .filter_bank import FilterBank, ShardedFilterBank
 from .pipeline import pipeline_apply
 from .sharding import Shardings, batch_axes_for, make_shardings, mesh_axis_sizes
-from .tenant_bank import ShardedTenantFilterBank, TenantFilterBank
+from .tenant_bank import (AgingTenantBank, ShardedTenantFilterBank,
+                          TenantFilterBank)
 
 __all__ = [
     "Shardings", "batch_axes_for", "make_shardings", "mesh_axis_sizes",
@@ -25,5 +26,5 @@ __all__ = [
     "elias_fano_size_bits",
     "pack_filter_state", "unpack_filter_state",
     "FilterBank", "ShardedFilterBank",
-    "TenantFilterBank", "ShardedTenantFilterBank",
+    "TenantFilterBank", "ShardedTenantFilterBank", "AgingTenantBank",
 ]

@@ -54,7 +54,8 @@ class FilterBank:
 
     def __init__(self, d: int, n_shards: int, n_keys: int,
                  bits_per_key: float = 16.0, delta: int = 6,
-                 seed: int = 0x0B100F11, *, _warn: bool = True):
+                 seed: int = 0x0B100F11, *, _warn: bool = True,
+                 _layout=None):
         if _warn:
             from .._compat import warn_legacy
 
@@ -69,10 +70,22 @@ class FilterBank:
         self.n_shards = n_shards
         self.shard_bits = shard_bits
         self.d_local = d - shard_bits
+        self.n_keys = n_keys
+        self.bits_per_key = bits_per_key
+        self.delta = delta
+        self.seed = seed
         self.kdtype = key_dtype_for(d)
-        self.layout = basic_layout(self.d_local,
-                                   max(n_keys // n_shards, 1), bits_per_key,
-                                   delta=min(delta, self.d_local), seed=seed)
+        if _layout is not None:           # in-place growth (core/dynamic.py)
+            if _layout.d != self.d_local:
+                raise ValueError(
+                    f"_layout.d={_layout.d} != shard domain {self.d_local}")
+            self.layout = _layout
+        else:
+            self.layout = basic_layout(self.d_local,
+                                       max(n_keys // n_shards, 1),
+                                       bits_per_key,
+                                       delta=min(delta, self.d_local),
+                                       seed=seed)
         self.filter = BloomRF(self.layout, _warn=False)
         # all shard rows probed at once: one fused gather (core/engine.py)
         self._stacked = stacked_probe(

@@ -63,10 +63,11 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
 
-from ..core import BloomRF, basic_layout, dyadic_prefixes, stacked_probe
+from ..core import (BloomRF, Generations, basic_layout, dyadic_prefixes,
+                    promote_layout, promote_state, stacked_probe)
 from .filter_bank import FilterBank
 
-__all__ = ["TenantFilterBank", "ShardedTenantFilterBank"]
+__all__ = ["TenantFilterBank", "ShardedTenantFilterBank", "AgingTenantBank"]
 
 _NO_TENANT = 0xFFFFFFFF  # padding sentinel tenant id: owned by nobody
 
@@ -78,7 +79,7 @@ class TenantFilterBank:
                  n_keys_per_tenant: int, bits_per_key: float = 16.0,
                  delta: int = 6, meta_level: Optional[int] = None,
                  meta_bits_per_prefix: float = 8.0, seed: int = 0x0B100F11,
-                 *, _warn: bool = True):
+                 *, _warn: bool = True, _layout=None, _meta_layout=None):
         if _warn:
             from .._compat import warn_legacy
 
@@ -88,10 +89,16 @@ class TenantFilterBank:
         if n_tenants < 1:
             raise ValueError(f"need >= 1 tenant, got {n_tenants}")
         self.bank = FilterBank(d, n_shards, n_keys_per_tenant, bits_per_key,
-                               delta=delta, seed=seed, _warn=False)
+                               delta=delta, seed=seed, _warn=False,
+                               _layout=_layout)
         self.d = d
         self.n_tenants = n_tenants
         self.n_shards = n_shards
+        self.n_keys_per_tenant = n_keys_per_tenant
+        self.bits_per_key = bits_per_key
+        self.delta = delta
+        self.meta_bits_per_prefix = meta_bits_per_prefix
+        self.seed = seed
         d_local = self.bank.d_local
         if meta_level is None:
             # coarse default: a ~12-bit prefix domain per shard.  On >32-bit
@@ -113,11 +120,18 @@ class TenantFilterBank:
                 f"domain in a different key dtype than the {d_local}-bit "
                 f"shard domain; the stacked main+meta plan needs one dtype "
                 f"(keep d_meta on the same side of 32 bits as d_local)")
-        n_prefixes = max(min(n_keys_per_tenant // n_shards,
-                             1 << min(d_meta, 24)), 1)
-        self.meta_layout = basic_layout(
-            d_meta, n_prefixes, meta_bits_per_prefix,
-            delta=min(delta, max(d_meta, 1)), seed=seed ^ 0xB100F1)
+        if _meta_layout is not None:      # in-place growth (core/dynamic.py)
+            if _meta_layout.d != d_meta:
+                raise ValueError(
+                    f"_meta_layout.d={_meta_layout.d} != prefix domain "
+                    f"{d_meta}")
+            self.meta_layout = _meta_layout
+        else:
+            n_prefixes = max(min(n_keys_per_tenant // n_shards,
+                                 1 << min(d_meta, 24)), 1)
+            self.meta_layout = basic_layout(
+                d_meta, n_prefixes, meta_bits_per_prefix,
+                delta=min(delta, max(d_meta, 1)), seed=seed ^ 0xB100F1)
         self.meta = BloomRF(self.meta_layout, _warn=False)
         # stacked one-gather probes over all (tenant, shard) rows; the
         # meta variant appends the coarse rows to the same flat stack
@@ -264,6 +278,90 @@ class TenantFilterBank:
     def size_bits(self) -> int:
         return self.n_tenants * self.n_shards * (
             self.bank.layout.total_bits + self.meta_layout.total_bits)
+
+    # -- in-place capacity growth (core/dynamic.py) ------------------------
+    def grown(self, factor: int = 4) -> "TenantFilterBank":
+        """A bank sized for ``factor`` more keys per tenant whose layouts
+        are the segment-tiled promotions of this bank's — existing state
+        carries over via :meth:`promote` with no key re-hashing."""
+        return TenantFilterBank(
+            self.d, self.n_tenants, self.n_shards,
+            n_keys_per_tenant=self.n_keys_per_tenant * factor,
+            bits_per_key=self.bits_per_key, delta=self.delta,
+            meta_level=self.meta_level,
+            meta_bits_per_prefix=self.meta_bits_per_prefix, seed=self.seed,
+            _warn=False,
+            _layout=promote_layout(self.bank.layout, factor),
+            _meta_layout=promote_layout(self.meta_layout, factor))
+
+    def promote(self, state, meta, factor: int = 4
+                ) -> Tuple["TenantFilterBank", jax.Array, jax.Array]:
+        """Grow in place: ``(new_bank, new_state, new_meta)`` with every
+        inserted key still probing positive under the new (``factor``-times
+        larger) layouts — zero false negatives, no access to the original
+        keys (the promotion theorem in ``core/dynamic.py``)."""
+        nb = self.grown(factor)
+        return (nb,
+                promote_state(state, self.bank.layout, nb.bank.layout),
+                promote_state(meta, self.meta_layout, nb.meta_layout))
+
+
+class AgingTenantBank:
+    """TTL wrapper over :class:`TenantFilterBank`: sweep-free expiry via
+    generation lanes (``core.Generations``).
+
+    Inserts land in the current generation's ``(state, meta)`` pair; every
+    probe reads the OR-collapse of all generations (sound because bloomRF
+    state is union-closed).  :meth:`advance` closes the TTL window — keys
+    whose last insert fell out of the retained window stop costing false
+    positives, with no per-key sweep and no FPR drift floor.  Reporting a
+    retired key absent is the TTL contract, not a false negative; hot keys
+    stay live by being re-inserted each window.
+    """
+
+    def __init__(self, bank: TenantFilterBank, n_generations: int = 4):
+        self.bank = bank
+        self.gens = Generations(
+            lambda: (bank.init_state(), bank.init_meta()), n_generations)
+
+    @property
+    def n_generations(self) -> int:
+        return self.gens.n_generations
+
+    def insert(self, tenants, keys) -> None:
+        self.gens.insert(
+            lambda sm, t, k: (self.bank.insert(sm[0], t, k),
+                              self.bank.insert_meta(sm[1], t, k)),
+            tenants, keys)
+
+    def point(self, tenants, qs):
+        state, _ = self.gens.collapsed
+        return self.bank.point(state, tenants, qs)
+
+    def range(self, tenants, lo, hi, use_meta: bool = True):
+        state, meta = self.gens.collapsed
+        return self.bank.range(state, tenants, lo, hi,
+                               meta if use_meta else None)
+
+    def advance(self) -> None:
+        """Retire the oldest generation's contributions."""
+        self.gens.advance()
+
+    def promoted(self, factor: int = 4) -> "AgingTenantBank":
+        """Grow every generation in place to ``factor`` larger layouts."""
+        nb = self.bank.grown(factor)
+        ol, nl = self.bank.bank.layout, nb.bank.layout
+        oml, nml = self.bank.meta_layout, nb.meta_layout
+        out = AgingTenantBank.__new__(AgingTenantBank)
+        out.bank = nb
+        out.gens = self.gens.map(
+            lambda sm: (promote_state(sm[0], ol, nl),
+                        promote_state(sm[1], oml, nml)),
+            zero_fn=lambda: (nb.init_state(), nb.init_meta()))
+        return out
+
+    def size_bits(self) -> int:
+        return self.bank.size_bits() * self.n_generations
 
 
 class ShardedTenantFilterBank:

@@ -63,16 +63,18 @@ def pack_key(session: int, chunk: int) -> int:
 
 class _Segment:
     def __init__(self, entries: Dict[int, List[int]], bank: TenantFilterBank,
-                 tenants: np.ndarray, local_keys: np.ndarray):
+                 tenants: np.ndarray, local_keys: np.ndarray, gen: int = 0):
         self.entries = entries
         self.bank = bank
+        self.gen = gen               # generation the segment was frozen in
         self.state, self.meta = bank.build(jnp.asarray(tenants),
                                            jnp.asarray(local_keys))
 
 
 class PrefixCacheIndex:
     def __init__(self, bits_per_key: float = 14.0, n_tenants: int = 16,
-                 backing_store: Optional[Store] = None):
+                 backing_store: Optional[Store] = None,
+                 ttl_generations: Optional[int] = None):
         if n_tenants < 1 or n_tenants & (n_tenants - 1):
             raise ValueError(
                 f"n_tenants must be a power of two, got {n_tenants}")
@@ -80,15 +82,21 @@ class PrefixCacheIndex:
             # at least one session bit must remain for the tenant-local key
             # (the meta-filter level sits at the chunk/session boundary)
             raise ValueError(f"at most {1 << (_SES_BITS - 1)} tenants")
+        if ttl_generations is not None and ttl_generations < 1:
+            raise ValueError(
+                f"ttl_generations must be >= 1, got {ttl_generations}")
         self.bits_per_key = bits_per_key
         self.n_tenants = n_tenants
         self.nt_bits = n_tenants.bit_length() - 1
         self.d_seg = (_SES_BITS - self.nt_bits) + _CHUNK_BITS
         self.segments: List[_Segment] = []
         self._banks: Dict[int, TenantFilterBank] = {}
+        self.ttl_generations = ttl_generations
+        self.generation = 0
         self.stats = {"filter_probes": 0, "filter_hits": 0,
                       "map_probes": 0, "map_hits": 0, "range_probes": 0,
-                      "store_probes": 0, "store_hits": 0, "evicted": 0}
+                      "store_probes": 0, "store_hits": 0, "evicted": 0,
+                      "expired": 0}
         self.store: Optional[Store] = None
         if backing_store is not None:
             self.attach_store(backing_store)
@@ -138,7 +146,7 @@ class PrefixCacheIndex:
         tenants = self._tenant(sessions).astype(np.uint32)
         local = self._local_key(sessions, chunks).astype(np.uint32)
         self.segments.append(_Segment(entries, self._bank_for(len(packed)),
-                                      tenants, local))
+                                      tenants, local, gen=self.generation))
         if self.store is not None:           # mirror into the cold tier
             for k, pages in entries.items():
                 self.store.put(k, pages)
@@ -224,10 +232,14 @@ class PrefixCacheIndex:
         those segments' maps.  When a backing store is attached, the cold
         tier is swept too: a session window is one contiguous range of
         packed keys, so a single (filter-pruned) ``store.scan`` finds
-        every cold entry in the window and tombstones it.  Segment
-        filters are immutable (insert-only), so an evicted key degrades
-        to one filter false positive until the segment is rebuilt;
-        correctness never depends on clearing bits."""
+        every cold entry in the window; the tombstones are written as ONE
+        batched ``store.delete_many`` after the scan completes — a per-key
+        delete loop could flush the memtable and cascade compactions
+        mid-sweep, invalidating the pruning work of the scan it just ran.
+        Segment filters are immutable (insert-only), so an evicted key
+        degrades to one filter false positive until the segment is rebuilt
+        or its generation retires; correctness never depends on clearing
+        bits."""
         dropped = set()
         for i in self.eviction_candidates(lo_session, hi_session):
             seg = self.segments[i]
@@ -238,13 +250,40 @@ class PrefixCacheIndex:
             dropped.update(drop)
         if self.store is not None:
             chunk_full = (1 << _CHUNK_BITS) - 1
-            for k, _ in self.store.scan(lo_session << _CHUNK_BITS,
-                                        (hi_session << _CHUNK_BITS)
-                                        | chunk_full):
-                self.store.delete(k)
-                dropped.add(k)
+            cold = [k for k, _ in self.store.scan(
+                lo_session << _CHUNK_BITS,
+                (hi_session << _CHUNK_BITS) | chunk_full)]
+            self.store.delete_many(cold)
+            dropped.update(cold)
         self.stats["evicted"] += len(dropped)
         return len(dropped)
+
+    def advance_generation(self) -> int:
+        """Close the current TTL window: segments frozen more than
+        ``ttl_generations`` windows ago are retired wholesale — their
+        entries, filter state, *and* filter bits disappear together, so
+        expired keys stop costing false positives without any per-key
+        sweep.  Retired entries are batch-tombstoned in the cold tier.
+        Hot prefixes survive by being re-frozen into newer segments;
+        expiry of anything older is the TTL contract, not a miss bug.
+        Returns the number of entries expired."""
+        if self.ttl_generations is None:
+            raise ValueError(
+                "PrefixCacheIndex was built without ttl_generations")
+        self.generation += 1
+        cutoff = self.generation - self.ttl_generations
+        expired: List[int] = []
+        kept: List[_Segment] = []
+        for seg in self.segments:
+            if seg.gen <= cutoff:
+                expired.extend(seg.entries)
+            else:
+                kept.append(seg)
+        self.segments = kept
+        if self.store is not None and expired:
+            self.store.delete_many(expired)
+        self.stats["expired"] += len(expired)
+        return len(expired)
 
     def false_positive_rate(self) -> float:
         fp = self.stats["map_probes"] - self.stats["map_hits"]

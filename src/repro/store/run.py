@@ -24,20 +24,24 @@ import numpy as np
 from ..core import FilterLayout
 from ..dist.compression import (elias_fano_decode, elias_fano_encode,
                                 pack_filter_state, unpack_filter_state)
+from .memtable import TOMBSTONE
 
 __all__ = ["Run"]
 
-_SNAPSHOT_SCHEMA = "bloomrf-run/v1"
+_SNAPSHOT_SCHEMA = "bloomrf-run/v2"
+_ACCEPTED_SCHEMAS = ("bloomrf-run/v1", "bloomrf-run/v2")
 
 
 class Run:
     """One immutable sorted run with its filter block and fences."""
 
-    __slots__ = ("keys", "vals", "tombs", "level", "layout", "state", "alt")
+    __slots__ = ("keys", "vals", "tombs", "level", "layout", "state", "alt",
+                 "promotions")
 
     def __init__(self, keys: np.ndarray, vals: list, tombs: np.ndarray,
                  level: int, layout: FilterLayout,
-                 state: Optional[jax.Array], alt=None):
+                 state: Optional[jax.Array], alt=None,
+                 promotions: int = 0):
         keys = np.asarray(keys, np.uint64)
         if keys.ndim != 1 or len(keys) == 0:
             raise ValueError("a run needs a non-empty 1-D key vector")
@@ -52,6 +56,13 @@ class Run:
         self.layout = layout
         self.state = state            # uint32[layout.total_u32] filter block
         self.alt = alt                # optional baseline PointRangeFilter
+        # promote hops this filter block has survived without a rebuild.
+        # A promoted segment answers queries at the *source* class's
+        # resolution (positions fold back mod the old size), so each hop
+        # ORs states without adding resolution and multiplies FPR by the
+        # source count — the store caps hops (promote_max_hops) to keep
+        # that bounded.
+        self.promotions = int(promotions)
 
     # -- fences ----------------------------------------------------------
     @property
@@ -90,15 +101,23 @@ class Run:
 
     # -- snapshots (Elias-Fano, dist/compression.py) ---------------------
     def pack(self) -> dict:
-        """Compressed snapshot: EF posting lists for keys + filter bits."""
+        """Compressed snapshot: EF posting lists for keys + filter bits.
+
+        Tombstoned slots store a ``None`` placeholder, not the in-process
+        ``TOMBSTONE`` sentinel — the sentinel only round-trips by object
+        identity and would make the snapshot unserializable to real bytes.
+        ``unpack`` restores the canonical sentinel from the tombstone mask.
+        """
         enc = {
             "schema": _SNAPSHOT_SCHEMA,
             "level": self.level,
             "layout": dataclasses.asdict(self.layout),
             "keys": elias_fano_encode(self.keys, universe=1 << 64),
-            "vals": list(self.vals),
+            "vals": [None if t else v
+                     for v, t in zip(self.vals, self.tombs)],
             "tombs": np.packbits(self.tombs),
             "n": len(self.keys),
+            "promotions": self.promotions,
         }
         if self.state is not None:
             enc["filter"] = pack_filter_state(np.asarray(self.state))
@@ -106,7 +125,7 @@ class Run:
 
     @classmethod
     def unpack(cls, enc: dict, alt=None) -> "Run":
-        if enc.get("schema") != _SNAPSHOT_SCHEMA:
+        if enc.get("schema") not in _ACCEPTED_SCHEMAS:
             raise ValueError(f"not a run snapshot: {enc.get('schema')!r}")
         layout = FilterLayout(**enc["layout"])
         n = enc["n"]
@@ -116,5 +135,9 @@ class Run:
         if "filter" in enc:
             state = jnp.asarray(
                 unpack_filter_state(enc["filter"], layout.total_u32))
-        return cls(keys, list(enc["vals"]), tombs, enc["level"], layout,
-                   state, alt=alt)
+        # the tombstone mask is authoritative (the memtable guarantees
+        # vals[i] is the sentinel exactly where tombs[i]); restoring from it
+        # also heals v1 snapshots whose vals hold stale sentinel objects
+        vals = [TOMBSTONE if t else v for v, t in zip(enc["vals"], tombs)]
+        return cls(keys, vals, tombs, enc["level"], layout,
+                   state, alt=alt, promotions=enc.get("promotions", 0))

@@ -18,9 +18,16 @@ the test suite).  Only runs whose fences overlap *and* whose filter says
 "maybe" have their data blocks touched; :class:`StoreStats` counts what
 the filters saved (skips, false-positive reads, bytes not read).
 
-Filters are insert-only: a delete writes a tombstone *entry* whose key is
-inserted like any other, so newer tombstones are discoverable through the
-filters and mask older runs at read time; no filter bit is ever cleared.
+Filters are insert-only at write time: a delete writes a tombstone
+*entry* whose key is inserted like any other, so newer tombstones are
+discoverable through the filters and mask older runs at read time; no
+filter bit is cleared outside compaction.  With
+``mutability="deletable"`` compaction fights the resulting FPR drift:
+class-graduating merges *promote* source filters in place (segment
+tiling, ``core/dynamic.py``) instead of replaying keys, and when a
+merge's dead-entry fraction exceeds ``purge_dead_frac`` the filter is
+rebuilt from the surviving keys — purging every deleted key's bits at
+the natural rebuild point (DESIGN.md §12).
 
 ``filter_backend`` swaps the per-run filter: ``"bloomrf"`` (stacked
 one-gather probes), ``"none"`` (min/max fences only — the pruning
@@ -69,11 +76,39 @@ class StoreConfig:
     use_insert_kernels: bool = False  # route rebuilds through FilterOps.insert
     value_bytes: int = 64           # per-entry data-block size for accounting
     seed: int = 0x0B100F11
+    mutability: str = "insert_only"  # "insert_only" | "deletable"
+    purge_dead_frac: float = 0.25   # deletable: dead fraction forcing a purge
+    promote_max_hops: int = 1       # promote hops a filter survives before a
+                                    # rebuild is forced (promotion keeps the
+                                    # source class's resolution, so each hop
+                                    # multiplies FPR by the source count)
+    promote_density_slack: float = 1.5  # promote only when the OR-union's
+                                    # per-layer density stays within this
+                                    # factor of a rebuild's (compaction.py)
 
     def __post_init__(self):
+        if not (1 <= self.d <= 64):
+            raise ValueError(
+                f"d must be in 1..64 (uint64 key domain), got {self.d}")
+        if not self.bits_per_key > 0:
+            raise ValueError(
+                f"bits_per_key must be > 0, got {self.bits_per_key}")
         if self.memtable_limit < 1 or self.fanout < 2 or self.level0_runs < 1:
             raise ValueError("memtable_limit >= 1, fanout >= 2, "
                              "level0_runs >= 1 required")
+        if self.mutability not in ("insert_only", "deletable"):
+            raise ValueError(
+                f"mutability must be 'insert_only' or 'deletable', "
+                f"got {self.mutability!r}")
+        if not (0.0 < self.purge_dead_frac <= 1.0):
+            raise ValueError(
+                f"purge_dead_frac must be in (0, 1], got {self.purge_dead_frac}")
+        if self.promote_max_hops < 0:
+            raise ValueError(
+                f"promote_max_hops must be >= 0, got {self.promote_max_hops}")
+        if not self.promote_density_slack > 0:
+            raise ValueError(f"promote_density_slack must be > 0, "
+                             f"got {self.promote_density_slack}")
         if self.filter_backend not in ("bloomrf", "none"):
             _baseline_factory(self.filter_backend)  # raises on unknown name
 
@@ -90,6 +125,8 @@ class StoreStats:
     compactions: int = 0
     or_merges: int = 0              # same-layout filter merges (bitwise OR)
     rebuild_merges: int = 0         # cross-layout merges (key re-insert)
+    promote_merges: int = 0         # in-place segment-tiled class promotions
+    purge_rebuilds: int = 0         # rebuilds forced by the dead-frac policy
     # point reads
     get_runs_considered: int = 0
     get_fence_skips: int = 0
@@ -206,6 +243,19 @@ class Store:
         if len(self.mem) >= self.cfg.memtable_limit:
             self.flush()
 
+    def delete_many(self, keys) -> None:
+        """Batched deletes: every tombstone lands in the memtable before the
+        single flush decision, so a large eviction sweep triggers at most one
+        flush (plus its own compaction cascade) instead of one per
+        ``memtable_limit`` keys interleaved with the caller's scan."""
+        n = 0
+        for key in keys:
+            self.mem.delete(self._check_key(key))
+            n += 1
+        self.stats.deletes += n
+        if len(self.mem) >= self.cfg.memtable_limit:
+            self.flush()
+
     def flush(self) -> None:
         """Freeze the memtable into a new level-0 run."""
         if len(self.mem) == 0:
@@ -250,19 +300,40 @@ class Store:
         target_layout = self.class_layout(len(keys))
         state = alt = None
         if self.cfg.filter_backend == "bloomrf":
-            state, via_or = merge_filter_state(
-                sources, target_layout, keys, self._build_filter)
-            if via_or:
-                self.stats.or_merges += 1
-            else:
-                self.stats.rebuild_merges += 1
+            # fraction of merged entries that did not survive (shadowed
+            # duplicates + dropped tombstones): the bits those entries set
+            # are dead weight in an OR/promote-merged filter
+            n_in = sum(len(r) for r in sources)
+            dead_frac = 1.0 - len(keys) / n_in
+            deletable = self.cfg.mutability == "deletable"
+            # cap promotion depth: a promoted filter still answers at its
+            # source class's resolution, so hop-on-hop promotion compounds
+            # FPR; once any source has used its hops, rebuild fresh
+            hops = max((r.promotions for r in sources), default=0)
+            state, how = merge_filter_state(
+                sources, target_layout, keys, self._build_filter,
+                dead_frac=dead_frac,
+                purge_dead_frac=(self.cfg.purge_dead_frac if deletable
+                                 else None),
+                allow_promote=deletable
+                and hops < self.cfg.promote_max_hops,
+                promote_density_slack=self.cfg.promote_density_slack)
+            counter = {"or": "or_merges", "promote": "promote_merges",
+                       "rebuild": "rebuild_merges", "purge": "purge_rebuilds"}
+            setattr(self.stats, counter[how],
+                    getattr(self.stats, counter[how]) + 1)
+            promotions = {"or": hops, "promote": hops + 1}.get(how, 0)
         elif self.cfg.filter_backend != "none":
             alt = _baseline_factory(self.cfg.filter_backend)(
                 self.cfg.bits_per_key)
             alt.build(keys)
             self.stats.rebuild_merges += 1
+            promotions = 0
+        else:
+            promotions = 0
         self.levels[level + 1] = [
-            Run(keys, vals, tombs, level + 1, target_layout, state, alt=alt)]
+            Run(keys, vals, tombs, level + 1, target_layout, state, alt=alt,
+                promotions=promotions)]
         self.stats.compactions += 1
         self._dirty = True
 
@@ -353,6 +424,8 @@ class Store:
         st = self.stats
         st.gets += len(keys)
         fence, filt = self.probe_runs(keys, keys, point=True)
+        dbytes = np.asarray([r.data_bytes(self.cfg.value_bytes)
+                             for r in self._runs], np.int64)
         out = []
         for b, key in enumerate(keys):
             found, v = self.mem.get(int(key))
@@ -364,6 +437,10 @@ class Store:
             st.get_runs_considered += R
             st.get_fence_skips += int((~fence[b]).sum())
             st.get_filter_skips += int((fence[b] & ~filt[b]).sum())
+            # skipped runs save their data blocks on the point path too —
+            # mirror of the _scan_one credit, so bytes_not_read covers
+            # point-heavy workloads instead of understating savings
+            st.bytes_not_read += int(dbytes[~(fence[b] & filt[b])].sum())
             for r_idx in np.flatnonzero(fence[b] & filt[b]):
                 run = self._runs[r_idx]
                 st.get_run_reads += 1
@@ -435,14 +512,19 @@ class Store:
 
     def snapshot(self) -> dict:
         """Compressed snapshot of every frozen run (memtable excluded —
-        flush first for a full-state snapshot)."""
-        return {"schema": "bloomrf-store/v1",
+        flush first for a full-state snapshot).
+
+        v2 snapshots are byte-serializable (run ``vals`` hold ``None``
+        placeholders for tombstones instead of the in-process sentinel) and
+        carry the churn-policy config fields; ``restore`` accepts v1 too.
+        """
+        return {"schema": "bloomrf-store/v2",
                 "config": dataclasses.asdict(self.cfg),
                 "levels": [[r.pack() for r in lvl] for lvl in self.levels]}
 
     @classmethod
     def restore(cls, snap: dict) -> "Store":
-        if snap.get("schema") != "bloomrf-store/v1":
+        if snap.get("schema") not in ("bloomrf-store/v1", "bloomrf-store/v2"):
             raise ValueError(f"not a store snapshot: {snap.get('schema')!r}")
         store = cls(StoreConfig(**snap["config"]), _warn=False)
         store.levels = [[Run.unpack(enc) for enc in lvl]

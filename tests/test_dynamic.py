@@ -1,0 +1,253 @@
+"""Dynamic-filter machinery (core/dynamic.py, DESIGN.md §12): in-place
+capacity promotion, counting-lane deletes, and generation-based TTL aging.
+
+The promotion invariant under test: because ``(h mod f*N) mod N == h mod N``,
+tiling each hashed segment ``f`` times maps every old bit into the position
+the new layout would probe — so a promoted state admits **zero** false
+negatives without re-hashing a single key, and promotion distributes over
+OR (the property compaction's promote merge relies on).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BloomRF, CountingLanes, DeletableBloomRF, Generations,
+                        basic_layout, clear_bits, promote_layout,
+                        promote_state, promotion_factors)
+from repro.store import Store, StoreConfig
+
+
+def _keys(rng, d, n):
+    return rng.integers(0, (1 << d) - 1, n, dtype=np.uint64)
+
+
+# ---------------------------------------------------------------------------
+# promotion: layout compatibility
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d,delta", [(24, 6), (32, 6), (32, 4), (20, 7)])
+def test_promote_layout_factors(d, delta):
+    old = basic_layout(d, 512, 14.0, delta=delta)
+    new = promote_layout(old, factor=4)
+    fac = promotion_factors(old, new)
+    assert fac is not None
+    # hashed segments scale by exactly the factor; exact segments stay 1
+    for s, f in enumerate(fac):
+        assert f == (1 if s == old.exact_seg else 4)
+    assert promotion_factors(old, old) is not None      # identity promotes
+    assert promotion_factors(new, old) is None          # no demotion
+
+
+def test_store_ladder_classes_are_promotion_compatible():
+    """Consecutive capacity classes of the store's layout ladder promote."""
+    st = Store(StoreConfig(d=32, memtable_limit=4096, bits_per_key=14.0))
+    prev = st.class_layout(1)
+    for cls in range(1, 4):
+        cur = st.class_layout(st.class_capacity(cls))
+        fac = promotion_factors(prev, cur)
+        assert fac is not None and max(fac) > 1
+        prev = cur
+
+
+def test_promotion_rejects_incompatible_layouts():
+    old = basic_layout(32, 512, 14.0, delta=6, seed=1)
+    assert promotion_factors(old, basic_layout(32, 2048, 14.0, delta=6,
+                                               seed=2)) is None   # seed
+    assert promotion_factors(old, basic_layout(24, 2048, 14.0,
+                                               delta=6, seed=1)) is None  # d
+    assert promotion_factors(old, basic_layout(32, 2048, 14.0, delta=4,
+                                               seed=1)) is None   # deltas
+    with pytest.raises(ValueError):
+        promote_state(BloomRF(old).init_state(), old,
+                      basic_layout(32, 2048, 14.0, delta=6, seed=2))
+
+
+# ---------------------------------------------------------------------------
+# promotion: zero false negatives + OR distribution
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d,factor", [(24, 4), (32, 4), (32, 16)])
+def test_promoted_state_has_zero_false_negatives(rng, d, factor):
+    old = basic_layout(d, 512, 14.0, delta=6)
+    new = promote_layout(old, factor=factor)
+    keys = np.unique(_keys(rng, d, 2000))
+    fo, fn_ = BloomRF(old), BloomRF(new)
+    state = fo.build(jnp.asarray(keys, fo.kdtype))
+    promoted = promote_state(state, old, new)
+    kj = jnp.asarray(keys, fn_.kdtype)
+    assert np.asarray(fn_.point(promoted, kj)).all()
+    lo = np.maximum(keys, 2) - 2
+    hi = np.minimum(keys + 3, (1 << d) - 1)
+    assert np.asarray(fn_.range(promoted, jnp.asarray(lo, fn_.kdtype),
+                                jnp.asarray(hi, fn_.kdtype))).all()
+
+
+def test_promotion_distributes_over_or(rng):
+    old = basic_layout(32, 512, 14.0, delta=6)
+    new = promote_layout(old, factor=4)
+    f = BloomRF(old)
+    a = f.build(jnp.asarray(_keys(rng, 32, 700), f.kdtype))
+    b = f.build(jnp.asarray(_keys(rng, 32, 700), f.kdtype))
+    lhs = promote_state(jnp.bitwise_or(a, b), old, new)
+    rhs = jnp.bitwise_or(promote_state(a, old, new),
+                         promote_state(b, old, new))
+    np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))
+
+
+def test_promoted_state_keeps_fpr_reasonable(rng):
+    """Promotion leaves junk bits from dropped top layers but must not
+    saturate the new layout: absent-key FPR stays well under 50%."""
+    old = basic_layout(32, 512, 14.0, delta=6)
+    new = promote_layout(old, factor=4)
+    keys = _keys(rng, 32, 512)
+    fo, fnew = BloomRF(old), BloomRF(new)
+    promoted = promote_state(fo.build(jnp.asarray(keys, fo.kdtype)), old, new)
+    absent = _keys(rng, 32, 20_000)
+    fpr = float(np.asarray(fnew.point(promoted,
+                                      jnp.asarray(absent,
+                                                  fnew.kdtype))).mean())
+    assert fpr < 0.25
+
+
+# ---------------------------------------------------------------------------
+# counting lanes + deletable filter
+# ---------------------------------------------------------------------------
+
+def test_counting_lanes_add_remove_and_saturation():
+    lanes = CountingLanes(64)
+    lanes.add(np.array([3, 3, 7]))
+    assert lanes.counts[3] == 2 and lanes.counts[7] == 1
+    assert list(lanes.remove(np.array([3]))) == []      # still one holder
+    assert list(lanes.remove(np.array([3, 7]))) == [3, 7]
+    # saturated counters freeze: they never drain back to zero
+    lanes.add(np.repeat(5, CountingLanes.SATURATE + 10))
+    assert lanes.counts[5] == CountingLanes.SATURATE
+    for _ in range(CountingLanes.SATURATE + 10):
+        assert list(lanes.remove(np.array([5]))) == []
+    assert lanes.counts[5] == CountingLanes.SATURATE
+
+
+def test_clear_bits_only_touches_given_positions(rng):
+    state = jnp.asarray(rng.integers(0, 1 << 32, 8, dtype=np.uint32))
+    pos = np.array([0, 33, 255])
+    out = np.asarray(clear_bits(state, pos))
+    ref = np.asarray(state).copy()
+    for p in pos:
+        ref[p >> 5] &= ~np.uint32(1 << (p & 31))
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_deletable_filter_delete_then_no_false_negative(rng):
+    layout = basic_layout(32, 2048, 14.0, delta=6)
+    df = DeletableBloomRF(layout)
+    keys = np.unique(_keys(rng, 32, 2000))
+    gone, kept = keys[: len(keys) // 2], keys[len(keys) // 2:]
+    state = df.insert(df.init_state(), keys)
+    state = df.delete(state, gone)
+    kj = jnp.asarray(kept, df.kdtype)
+    assert np.asarray(df.point(state, kj)).all()
+    # deletes actually reclaim bits: most deleted keys stop probing positive
+    gj = jnp.asarray(gone, df.kdtype)
+    assert np.asarray(df.point(state, gj)).mean() < 0.05
+
+
+def test_deletable_filter_promotes_with_counts(rng):
+    layout = basic_layout(32, 512, 14.0, delta=6)
+    df = DeletableBloomRF(layout)
+    keys = np.unique(_keys(rng, 32, 900))
+    state = df.insert(df.init_state(), keys)
+    big, state = df.promoted(promote_layout(layout, 4), state)
+    assert np.asarray(big.point(state, jnp.asarray(keys, big.kdtype))).all()
+    # counters moved with the bits: deletes still work post-promotion
+    state = big.delete(state, keys[:100])
+    assert np.asarray(big.point(
+        state, jnp.asarray(keys[100:], big.kdtype))).all()
+
+
+# ---------------------------------------------------------------------------
+# generations (TTL aging)
+# ---------------------------------------------------------------------------
+
+def test_generations_expiry_contract(rng):
+    layout = basic_layout(32, 1024, 14.0, delta=6)
+    f = BloomRF(layout)
+    gens = Generations(f.init_state, n_generations=3)
+    keys = jnp.asarray(_keys(rng, 32, 400), f.kdtype)
+    gens.insert(f.insert, keys)
+    assert np.asarray(f.point(gens.collapsed, keys)).all()
+    # survives n_generations - 1 advances ...
+    for _ in range(2):
+        gens.advance()
+        assert np.asarray(f.point(gens.collapsed, keys)).all()
+    # ... and is fully dropped by the n_generations-th
+    gens.advance()
+    assert not np.asarray(gens.collapsed).any()
+
+
+def test_generations_map_promotes_every_generation(rng):
+    old = basic_layout(32, 512, 14.0, delta=6)
+    new = promote_layout(old, 4)
+    fo, fnew = BloomRF(old), BloomRF(new)
+    gens = Generations(fo.init_state, n_generations=3)
+    k1 = jnp.asarray(_keys(rng, 32, 200), fo.kdtype)
+    k2 = jnp.asarray(_keys(rng, 32, 200), fo.kdtype)
+    gens.insert(fo.insert, k1)
+    gens.advance()
+    gens.insert(fo.insert, k2)
+    gens = gens.map(lambda st: promote_state(st, old, new),
+                    zero_fn=fnew.init_state)
+    assert np.asarray(fnew.point(gens.collapsed, k1)).all()
+    assert np.asarray(fnew.point(gens.collapsed, k2)).all()
+    gens.advance()                      # k1's generation retires first
+    assert np.asarray(fnew.point(gens.collapsed, k2)).all()
+
+
+# ---------------------------------------------------------------------------
+# facade growth (api.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mutability", ["insert_only", "deletable", "ttl"])
+def test_facade_grow_keeps_keys(rng, mutability):
+    from repro.api import FilterSpec, open_filter
+
+    f = open_filter(FilterSpec(dtype="u32", n=1024, mutability=mutability))
+    keys = _keys(rng, 32, 1000)
+    f.insert(keys)
+    before = f.size_bits()
+    f.grow(4)
+    assert f.size_bits() > before
+    assert f.spec.n == 4096
+    assert np.asarray(f.point(keys)).all()
+    assert np.asarray(f.range(np.maximum(keys, 2) - 2, keys)).all()
+
+
+def test_facade_tenant_grow_and_ttl(rng):
+    from repro.api import FilterSpec, open_filter
+
+    f = open_filter(FilterSpec(dtype="u32", n=1024, placement="tenant",
+                               tenants=4, shards=2, mutability="ttl",
+                               generations=2))
+    tenants = rng.integers(0, 4, 600).astype(np.uint32)
+    keys = _keys(rng, 32, 600)
+    f.insert(tenants, keys)
+    f.grow(4)
+    assert np.asarray(f.point(tenants, keys)).all()
+    assert np.asarray(f.range(tenants, keys, keys)).all()
+    f.advance_generation()
+    f.advance_generation()
+    assert not np.asarray(f.point(tenants, keys)).any() or \
+        np.asarray(f.point(tenants, keys)).mean() < 0.05
+
+
+def test_facade_mutability_validation():
+    from repro.api import FilterSpec
+
+    with pytest.raises(ValueError):
+        FilterSpec(dtype="u32", mutability="frozen")
+    with pytest.raises(ValueError):
+        FilterSpec(dtype="u32", placement="tenant", tenants=2,
+                   mutability="deletable")
+    with pytest.raises(ValueError):
+        FilterSpec(dtype="u32", placement="store", mutability="ttl")
+    with pytest.raises(ValueError):
+        FilterSpec(dtype="u32", mutability="ttl", generations=1)

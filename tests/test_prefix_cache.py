@@ -118,3 +118,49 @@ def test_store_backed_cold_tier_and_eviction():
     late.attach_store(Store(StoreConfig(d=32, memtable_limit=32)))
     del late.segments[0].entries[pack_key(5, 1)]
     assert late.lookup(5, 1) == [501]
+
+
+def test_evict_window_batches_store_tombstones():
+    """A window sweep writes its cold-tier tombstones as ONE batched
+    delete_many: at most one flush, never a per-key flush cascade that
+    would compact mid-sweep (regression for the old delete-per-key loop)."""
+    from repro.store import Store, StoreConfig
+
+    store = Store(StoreConfig(d=32, memtable_limit=32, level0_runs=4))
+    idx = PrefixCacheIndex(bits_per_key=16, n_tenants=8,
+                           backing_store=store)
+    _freeze_sessions(idx, list(range(40)))     # 160 cold entries
+    store.flush()
+    f0 = store.stats.flushes
+    n = idx.evict_window(0, 39)                # sweeps all 160 >> memtable
+    assert n == 40 * 4
+    assert store.stats.flushes - f0 <= 1, \
+        "evict_window flushed more than once mid-sweep"
+    for s in range(40):
+        assert idx.lookup(s, 0) is None
+
+
+def test_ttl_generations_expire_segments():
+    """advance_generation retires whole segments past the TTL window —
+    entries, filter bits and cold-tier copies all expire together."""
+    from repro.store import Store, StoreConfig
+
+    store = Store(StoreConfig(d=32, memtable_limit=64, level0_runs=4))
+    idx = PrefixCacheIndex(bits_per_key=16, n_tenants=8,
+                           backing_store=store, ttl_generations=2)
+    _freeze_sessions(idx, [1, 2])              # generation 0
+    idx.advance_generation()
+    _freeze_sessions(idx, [3])                 # generation 1
+    assert idx.lookup(1, 0) == [100]           # still inside the window
+    assert idx.lookup(3, 0) == [300]
+    n = idx.advance_generation()               # gen-0 segments hit the cutoff
+    assert n == 2 * 4
+    assert idx.stats["expired"] == 8
+    assert idx.lookup(1, 0) is None            # expired (hot AND cold tiers)
+    assert idx.lookup(2, 3) is None
+    assert idx.lookup(3, 0) == [300]           # younger generation survives
+    # without ttl_generations the API is an explicit error
+    bare = PrefixCacheIndex(n_tenants=8)
+    import pytest
+    with pytest.raises(ValueError, match="ttl_generations"):
+        bare.advance_generation()

@@ -348,3 +348,93 @@ def test_store_stats_dict_shape():
     assert {"runs_probed_per_scan", "scan_fp_read_rate",
             "get_fp_read_rate"} <= set(d)
     assert dataclasses.is_dataclass(s)
+
+
+# ---------------------------------------------------------------------------
+# config validation (d / bits_per_key / mutability boundaries)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [
+    dict(d=0), dict(d=65), dict(d=-3),
+    dict(d=24, bits_per_key=0.0), dict(d=24, bits_per_key=-2.0),
+    dict(d=24, mutability="append_only"),
+    dict(d=24, mutability="deletable", purge_dead_frac=0.0),
+    dict(d=24, mutability="deletable", purge_dead_frac=1.5),
+])
+def test_store_config_rejects_bad_values(bad):
+    with pytest.raises(ValueError):
+        StoreConfig(**bad)
+
+
+@pytest.mark.parametrize("d", [1, 64])
+def test_store_config_domain_boundaries_work(d):
+    """d=1 and d=64 are legal domains: keys round-trip through flushes."""
+    st = Store(StoreConfig(d=d, memtable_limit=4, level0_runs=2))
+    keys = [0, 1] if d == 1 else [0, 1, 12345, (1 << 64) - 1]
+    for i, k in enumerate(keys):
+        st.put(k, i)
+    st.flush()
+    assert st.get_many(np.asarray(keys, np.uint64)) == list(range(len(keys)))
+    assert st.get(0) == 0
+
+
+# ---------------------------------------------------------------------------
+# bytes accounting: read + not-read must cover every considered run
+# ---------------------------------------------------------------------------
+
+def _runs_only_store(rng, n=800):
+    st = Store(StoreConfig(d=24, memtable_limit=128, level0_runs=4,
+                           bits_per_key=12.0))
+    keys = np.unique(rng.integers(0, 1 << 23, n).astype(np.uint64))
+    for i, k in enumerate(keys):
+        st.put(int(k), i)
+    st.flush()                          # no memtable residue
+    assert len(st.live_runs()) >= 2
+    return st, keys
+
+
+def test_bytes_accounting_is_conserved_on_gets(rng):
+    """Point path: every run is either read or credited to bytes_not_read —
+    the counters partition the considered data bytes (regression: the get
+    path used to never credit skipped runs, understating filter savings)."""
+    st, _ = _runs_only_store(rng)
+    total = sum(r.data_bytes(st.cfg.value_bytes) for r in st.live_runs())
+    absent = np.arange(1 << 23, (1 << 23) + 500, dtype=np.uint64)
+    r0, n0 = st.stats.bytes_read, st.stats.bytes_not_read
+    st.get_many(absent)
+    dr = st.stats.bytes_read - r0
+    dn = st.stats.bytes_not_read - n0
+    assert dr + dn == len(absent) * total
+    assert dn > 0, "no filter/fence credit on the point path"
+
+
+def test_bytes_accounting_is_conserved_on_scans(rng):
+    st, _ = _runs_only_store(rng)
+    total = sum(r.data_bytes(st.cfg.value_bytes) for r in st.live_runs())
+    lo = np.arange(1 << 23, (1 << 23) + 300, dtype=np.uint64)
+    r0, n0 = st.stats.bytes_read, st.stats.bytes_not_read
+    st.scan_many(lo, lo + 3)
+    dr = st.stats.bytes_read - r0
+    dn = st.stats.bytes_not_read - n0
+    assert dr + dn == len(lo) * total
+    assert dn > 0
+
+
+# ---------------------------------------------------------------------------
+# batched deletes flush at most once per call
+# ---------------------------------------------------------------------------
+
+def test_delete_many_flushes_at_most_once():
+    st = Store(StoreConfig(d=24, memtable_limit=128, level0_runs=8))
+    for k in range(1000, 1600):
+        st.put(k, k)
+    st.flush()
+    f0 = st.stats.flushes
+    st.delete_many(range(1000, 1500))   # 500 tombstones >> memtable_limit
+    assert st.stats.flushes - f0 <= 1
+    assert st.stats.deletes >= 500
+    st.flush()
+    assert all(v is None for v in st.get_many(
+        np.arange(1000, 1500, dtype=np.uint64)))
+    assert st.get_many(np.arange(1500, 1600, dtype=np.uint64)) == \
+        list(range(1500, 1600))

@@ -1,0 +1,210 @@
+"""Churn fuzz for dynamic filters (ISSUE: deletable/expiring lanes).
+
+The contract under churn: after any interleaving of inserts, deletes and
+generation expiry, (a) every live key is still readable — ZERO false
+negatives — and (b) the filters' false-positive rate on absent keys stays
+bounded instead of drifting upward as dead keys' bits accumulate.  The
+deletable store's purge/promote compaction is what prevents the drift;
+the insert-only store run on the identical op sequence is the control.
+
+``test_churn_fuzz_smoke`` is the tier-1 gate; the 1e6-op headline run is
+``test_churn_fuzz_slow_1e6`` (``-m slow``, the nightly lane).
+"""
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.store import Store, StoreConfig
+from repro.store.memtable import TOMBSTONE
+from repro.store.run import Run
+
+
+def _churn(store, rng, n_ops, key_space, delete_frac=0.4):
+    """Random put/delete mix; returns the surviving model dict."""
+    model = {}
+    for i in range(n_ops):
+        if model and rng.random() < delete_frac:
+            # delete a key that actually exists (the supported contract)
+            k = int(next(iter(model)))
+            store.delete(k)
+            del model[k]
+        else:
+            k = int(rng.integers(0, key_space))
+            store.put(k, i)
+            model[k] = i
+    return model
+
+
+def _filter_positive_rate(store, keys):
+    """Fraction of ``keys`` some run's (fence AND filter) lets through."""
+    fence, filt = store.probe_runs(keys, keys, point=True)
+    return float((fence & filt).any(axis=1).mean())
+
+
+def _run_churn_fuzz(rng, n_ops, memtable_limit):
+    space = 1 << 24
+    cfgs = {
+        "deletable": StoreConfig(d=24, memtable_limit=memtable_limit,
+                                 level0_runs=2, fanout=4, bits_per_key=14.0,
+                                 mutability="deletable"),
+        "insert_only": StoreConfig(d=24, memtable_limit=memtable_limit,
+                                   level0_runs=2, fanout=4,
+                                   bits_per_key=14.0),
+    }
+    fpr = {}
+    for name, cfg in cfgs.items():
+        st = Store(cfg)
+        model = _churn(st, np.random.default_rng(rng.integers(1 << 31)),
+                       n_ops, space)
+        st.flush()
+        # zero false negatives: every surviving key reads its last value
+        live = np.fromiter(model.keys(), np.uint64, len(model))
+        got = st.get_many(live)
+        assert got == [model[int(k)] for k in live], \
+            f"{name}: churn produced a false negative"
+        # FPR on definitely-absent keys (outside every inserted key)
+        absent = rng.integers(space, 2 * space, 20_000, dtype=np.uint64)
+        absent = np.minimum(absent, (1 << 24) - 1)
+        absent = absent[~np.isin(absent, live)]
+        fpr[name] = _filter_positive_rate(st, absent)
+        if name == "deletable":
+            assert st.stats.promote_merges + st.stats.purge_rebuilds > 0, \
+                "deletable churn never exercised promote/purge"
+    # bounded drift: churn with ~40% deletes must not saturate the filters,
+    # and washing dead bits out must not do *worse* than keeping them
+    assert fpr["deletable"] < 0.30, fpr
+    assert fpr["deletable"] <= fpr["insert_only"] + 0.02, fpr
+    return fpr
+
+
+def test_churn_fuzz_smoke(rng):
+    _run_churn_fuzz(rng, n_ops=12_000, memtable_limit=256)
+
+
+@pytest.mark.slow
+def test_churn_fuzz_slow_1e6(rng):
+    """Headline acceptance: 1e6 mixed ops, zero FN, bounded FPR drift."""
+    _run_churn_fuzz(rng, n_ops=1_000_000, memtable_limit=4096)
+
+
+# ---------------------------------------------------------------------------
+# TTL / generation expiry fuzz
+# ---------------------------------------------------------------------------
+
+def test_ttl_generation_fuzz(rng):
+    """Zero FN for keys inside the TTL window; expired keys decay to the
+    background FPR instead of accumulating."""
+    from repro.api import FilterSpec, open_filter
+
+    G = 3
+    f = open_filter(FilterSpec(dtype="u32", n=4096, mutability="ttl",
+                               generations=G))
+    batches = []          # batches[i] inserted right after advance #i
+    for epoch in range(8):
+        keys = rng.integers(0, 1 << 32, 500, dtype=np.uint64)
+        f.insert(keys)
+        batches.append(keys)
+        # live window: current generation plus the G-1 younger survivors
+        live = np.concatenate(batches[max(0, epoch - (G - 1)):])
+        assert np.asarray(f.point(live)).all(), \
+            f"epoch {epoch}: FN inside the TTL window"
+        if epoch >= G:
+            expired = np.concatenate(batches[: epoch - (G - 1)])
+            assert np.asarray(f.point(expired)).mean() < 0.05, \
+                f"epoch {epoch}: expired keys did not decay"
+        absent = rng.integers(0, 1 << 32, 5000, dtype=np.uint64)
+        assert np.asarray(f.point(absent)).mean() < 0.05
+        f.advance_generation()
+    # fully drained: everything expired, state collapses to empty
+    for _ in range(G):
+        f.advance_generation()
+    assert not np.asarray(f.state).any()
+
+
+def test_aging_tenant_bank_fuzz(rng):
+    from repro.dist import AgingTenantBank, TenantFilterBank
+
+    bank = TenantFilterBank(d=32, n_tenants=4, n_shards=2,
+                            n_keys_per_tenant=2048, _warn=False)
+    aging = AgingTenantBank(bank, n_generations=2)
+    t1 = rng.integers(0, 4, 400).astype(np.uint32)
+    k1 = rng.integers(0, 1 << 32, 400, dtype=np.uint64)
+    aging.insert(t1, k1)
+    aging.advance()
+    t2 = rng.integers(0, 4, 400).astype(np.uint32)
+    k2 = rng.integers(0, 1 << 32, 400, dtype=np.uint64)
+    aging.insert(t2, k2)
+    assert np.asarray(aging.point(t1, k1)).all()      # still in window
+    assert np.asarray(aging.point(t2, k2)).all()
+    aging.advance()                                   # k1's generation dies
+    assert np.asarray(aging.point(t2, k2)).all()
+    assert np.asarray(aging.point(t1, k1)).mean() < 0.05
+    # growth preserves the window contents
+    grown = aging.promoted(factor=4)
+    assert np.asarray(grown.point(t2, k2)).all()
+
+
+# ---------------------------------------------------------------------------
+# snapshots through real bytes (satellite 1 + 5)
+# ---------------------------------------------------------------------------
+
+def _store_with_tombstones(rng):
+    # level0_runs high enough that the tombstoned flush is NOT immediately
+    # bottom-compacted away (bottom merges drop tombstone entries)
+    st = Store(StoreConfig(d=24, memtable_limit=512, level0_runs=4,
+                           fanout=3, bits_per_key=12.0))
+    keys = rng.integers(0, 1 << 24, 600, dtype=np.uint64)
+    for i, k in enumerate(keys):
+        st.put(int(k), i)
+    for k in keys[:150]:
+        st.delete(int(k))
+    st.flush()
+    return st, keys
+
+
+def test_run_pack_has_no_inprocess_sentinel(rng):
+    st, _ = _store_with_tombstones(rng)
+    runs = [r for r in st.live_runs() if r.tombs.any()]
+    assert runs, "fixture produced no tombstoned runs"
+    for run in runs:
+        enc = run.pack()
+        assert enc["schema"] == "bloomrf-run/v2"
+        assert not any(isinstance(v, type(TOMBSTONE)) for v in enc["vals"])
+        back = Run.unpack(enc)
+        for v, t in zip(back.vals, back.tombs):
+            assert (v is TOMBSTONE) == bool(t)   # identity, not a copy
+        np.testing.assert_array_equal(back.keys, run.keys)
+        np.testing.assert_array_equal(back.tombs, run.tombs)
+
+
+def test_run_unpack_accepts_v1_and_heals_identity(rng):
+    """A v1 snapshot that went through pickle carries *copies* of the
+    sentinel; unpack must restore the canonical object from the mask."""
+    st, _ = _store_with_tombstones(rng)
+    run = next(r for r in st.live_runs() if r.tombs.any())
+    enc = run.pack()
+    enc["schema"] = "bloomrf-run/v1"
+    stale = pickle.loads(pickle.dumps(TOMBSTONE))     # identity-broken copy
+    assert stale is not TOMBSTONE
+    enc["vals"] = [stale if t else v
+                   for v, t in zip(run.vals, run.tombs)]
+    back = Run.unpack(enc)
+    assert all((v is TOMBSTONE) == bool(t)
+               for v, t in zip(back.vals, back.tombs))
+
+
+def test_store_snapshot_pickle_roundtrip(rng):
+    st, keys = _store_with_tombstones(rng)
+    snap = st.snapshot()
+    assert snap["schema"] == "bloomrf-store/v2"
+    blob = pickle.dumps(snap)                         # REAL bytes
+    st2 = Store.restore(pickle.loads(blob))
+    qs = np.unique(keys)
+    assert st2.get_many(qs) == st.get_many(qs)
+    # deleted keys stay deleted after the round-trip
+    assert all(st2.get(int(k)) is None for k in keys[:150])
+    # and the restored tombstones keep sentinel identity
+    for run in st2.live_runs():
+        for v, t in zip(run.vals, run.tombs):
+            assert (v is TOMBSTONE) == bool(t)

@@ -50,7 +50,8 @@ def _merge_case(layout_a, layout_b, target, keys_a, keys_b):
         f = BloomRF(lay)
         return f.build(jnp.asarray(keys, f.kdtype))
 
-    state, via_or = merge_filter_state([run_a, run_b], target, union, build)
+    state, how = merge_filter_state([run_a, run_b], target, union, build)
+    via_or = how == "or"
     assert via_or == (layout_a == target and layout_b == target)
     _check_union_no_fn(target, state, union)
     if via_or:
@@ -101,6 +102,44 @@ def _seeded_cases(seed):
 @pytest.mark.parametrize("seed", [11, 22, 33, 44])
 def test_merge_invariant_seeded(seed):
     _seeded_cases(seed)
+
+
+@pytest.mark.parametrize("seed", [7, 19, 42])
+def test_promote_merge_invariant(seed):
+    """Promotion merges (deletable stores' in-place growth) admit no false
+    negatives and distribute over OR: promote(a|b) == promote(a)|promote(b)."""
+    from repro.core import promote_state, promotion_factors
+
+    rng = np.random.default_rng(seed)
+    d = int(rng.integers(16, 33))
+    hi = (1 << d) - 1
+    keys_a = rng.integers(0, hi, 300, dtype=np.uint64)
+    keys_b = rng.integers(0, hi, 300, dtype=np.uint64)
+    small = basic_layout(d, 256, 14.0, delta=6, seed=seed)
+    big = basic_layout(d, 1024, 14.0, delta=6, seed=seed)
+    assert promotion_factors(small, big) is not None
+
+    def build(lay, keys):
+        f = BloomRF(lay)
+        return f.build(jnp.asarray(keys, f.kdtype))
+
+    ka, kb = np.unique(keys_a), np.unique(keys_b)
+    run_a = Run(ka, [0] * len(ka), np.zeros(len(ka), bool), 0, small,
+                build(small, ka))
+    run_b = Run(kb, [0] * len(kb), np.zeros(len(kb), bool), 1, small,
+                build(small, kb))
+    union = np.unique(np.concatenate([ka, kb]))
+    state, how = merge_filter_state([run_a, run_b], big, union, build,
+                                    allow_promote=True)
+    assert how == "promote"
+    _check_union_no_fn(big, state, union)
+    # promotion distributes over OR — merged-then-promoted is bit-identical
+    ored = jnp.bitwise_or(run_a.state, run_b.state)
+    np.testing.assert_array_equal(np.asarray(state),
+                                  np.asarray(promote_state(ored, small, big)))
+    # without allow_promote the same inputs fall back to a rebuild
+    _, how2 = merge_filter_state([run_a, run_b], big, union, build)
+    assert how2 == "rebuild"
 
 
 def test_store_compaction_end_to_end_no_fn(rng):
