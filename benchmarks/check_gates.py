@@ -1,0 +1,324 @@
+"""Declarative CI bench gates: one harness, one TOML, zero inline shell math.
+
+Every perf/quality guarantee CI enforces used to live as an ad-hoc inline
+python step in ``ci.yml`` — unreviewable, untestable, and copy-pasted per
+check.  This module replaces them all: ``benchmarks/gates.toml`` declares
+the *inputs* (bench JSON artifacts + committed baselines, each with a
+schema whitelist) and the *gates* (threshold checks over dotted metric
+paths), and CI calls
+
+    python -m benchmarks.check_gates check --only <input> [name=path ...]
+
+once per bench JSON.  The gate logic itself is tier-1 unit-tested
+(``tests/test_check_gates.py``) — pass, fail, malformed input, and
+unknown-schema refusal are all asserted, which no inline YAML step ever
+was.
+
+Gate kinds (see gates.toml for the live set):
+
+``max_value`` / ``min_value``
+    absolute bound on a metric.
+``max_ratio`` (+ ``ref_input``/``ref_metric`` + optional ``slack``,
+``ref_floor``)
+    ``value <= max_ratio * max(ref, ref_floor) + slack`` — the committed-
+    baseline regression checks and the churn-vs-control drift bound.
+``require``
+    the metric path must resolve (row/section present).
+``contains``
+    substring match on a string metric (e.g. the roofline row's
+    ``dom=memory`` bandwidth-bound marker).
+
+Metric paths are dot-separated; a list of ``{"name": ...}`` rows is
+indexed by row name (names use ``/``, never ``.``), so
+``rows.kernels/range_probe_xla.us_per_call`` addresses the bench row
+directly.
+
+Schema refusal: every input declares the schema versions it understands;
+a baseline (or fresh artifact) with any other ``schema`` string fails the
+run with exit code 2 *before* any gate is evaluated — a silent format
+drift can never make gates vacuously pass.
+
+``trajectory`` mode guards the bench *trend* instead of a single
+baseline: ``benchmarks/run.py --smoke --json`` appends a timestamped
+metrics row to ``BENCH_TRAJECTORY.jsonl`` on every run, and
+
+    python -m benchmarks.check_gates trajectory BENCH_TRAJECTORY.jsonl
+
+fails when a configured metric worsened monotonically across the last
+``window`` rows by more than ``total_frac`` overall — the slow-creep
+regression a 1.5x single-baseline gate never catches.
+
+Exit codes: 0 = all gates pass, 1 = gate failure, 2 = malformed input /
+unknown schema / bad config.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+try:
+    import tomllib
+except ImportError:                         # Python < 3.11
+    import tomli as tomllib
+
+GATES_TOML = os.path.join(os.path.dirname(__file__), "gates.toml")
+CONFIG_SCHEMA = "bloomrf-gates/v1"
+TRAJECTORY_SCHEMA = "bloomrf-trajectory/v1"
+
+
+class GateError(Exception):
+    """A gate failed (exit 1)."""
+
+
+class InputError(Exception):
+    """Malformed input, unknown schema, or bad config (exit 2)."""
+
+
+def load_config(path: str = GATES_TOML) -> dict:
+    try:
+        with open(path, "rb") as f:
+            cfg = tomllib.load(f)
+    except (OSError, tomllib.TOMLDecodeError) as e:
+        raise InputError(f"cannot read gates config {path}: {e}")
+    if cfg.get("schema") != CONFIG_SCHEMA:
+        raise InputError(f"{path}: unknown gates schema "
+                         f"{cfg.get('schema')!r} (want {CONFIG_SCHEMA!r})")
+    for field in ("inputs", "gates"):
+        if field not in cfg:
+            raise InputError(f"{path}: missing [{field}] section")
+    return cfg
+
+
+def load_input(name: str, spec: dict, overrides: dict) -> dict:
+    """Load one bench JSON, enforcing the schema whitelist."""
+    path = overrides.get(name, spec.get("path"))
+    if not path:
+        raise InputError(f"input {name!r}: no path configured")
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise InputError(f"input {name!r} ({path}): {e}")
+    if not isinstance(data, dict):
+        raise InputError(f"input {name!r} ({path}): not a JSON object")
+    allowed = spec.get("schemas", [])
+    if data.get("schema") not in allowed:
+        raise InputError(
+            f"input {name!r} ({path}): unknown schema "
+            f"{data.get('schema')!r} — this harness understands {allowed}; "
+            f"refusing to evaluate gates against an unrecognised format")
+    # structural validation of the shared rows shape (when present)
+    value_key = spec.get("value_key")
+    if "rows" in data:
+        if not data["rows"]:
+            raise InputError(f"input {name!r} ({path}): empty rows")
+        for r in data["rows"]:
+            if not isinstance(r, dict) or not r.get("name"):
+                raise InputError(f"input {name!r} ({path}): malformed row "
+                                 f"{r!r}")
+            if value_key is not None:
+                try:
+                    float(r[value_key])
+                except (KeyError, TypeError, ValueError):
+                    raise InputError(
+                        f"input {name!r} ({path}): row {r.get('name')!r} "
+                        f"lacks a numeric {value_key!r}")
+    return data
+
+
+def resolve(data, path: str):
+    """Walk a dotted metric path; row lists are indexed by row name."""
+    cur = data
+    for part in path.split("."):
+        if isinstance(cur, list):
+            byname = {r.get("name"): r for r in cur if isinstance(r, dict)}
+            if part not in byname:
+                raise KeyError(f"no row named {part!r}")
+            cur = byname[part]
+        elif isinstance(cur, dict):
+            if part not in cur:
+                raise KeyError(f"no key {part!r}")
+            cur = cur[part]
+        else:
+            raise KeyError(f"cannot index {type(cur).__name__} with {part!r}")
+    return cur
+
+
+def _fmt(gate: dict) -> str:
+    return f"gate {gate.get('name', gate['metric'])!r}"
+
+
+def check_gate(gate: dict, inputs: dict) -> str:
+    """Evaluate one gate; returns a pass description or raises GateError."""
+    data = inputs[gate["input"]]
+    if gate.get("require"):
+        try:
+            resolve(data, gate["metric"])
+        except KeyError as e:
+            raise GateError(f"{_fmt(gate)}: required metric "
+                            f"{gate['metric']!r} missing ({e})")
+        return f"{_fmt(gate)}: present"
+    try:
+        value = resolve(data, gate["metric"])
+    except KeyError as e:
+        raise GateError(f"{_fmt(gate)}: metric {gate['metric']!r} "
+                        f"unresolved ({e})")
+    if "contains" in gate:
+        if gate["contains"] not in str(value):
+            raise GateError(f"{_fmt(gate)}: {gate['metric']} = {value!r} "
+                            f"does not contain {gate['contains']!r}")
+        return f"{_fmt(gate)}: contains {gate['contains']!r}"
+    value = float(value)
+    if "max_ratio" in gate:
+        ref_data = inputs[gate.get("ref_input", gate["input"])]
+        try:
+            ref = float(resolve(ref_data, gate["ref_metric"]))
+        except KeyError as e:
+            raise GateError(f"{_fmt(gate)}: ref metric "
+                            f"{gate['ref_metric']!r} unresolved ({e})")
+        ref_eff = max(ref, gate.get("ref_floor", ref))
+        bound = gate["max_ratio"] * ref_eff + gate.get("slack", 0.0)
+        if value > bound:
+            raise GateError(
+                f"{_fmt(gate)}: {gate['metric']} = {value:.4f} > "
+                f"{gate['max_ratio']}x ref {ref:.4f}"
+                + (f" + {gate['slack']}" if gate.get("slack") else "")
+                + f" (bound {bound:.4f}) — {gate.get('why', 'regression')}")
+        return (f"{_fmt(gate)}: {value:.4f} <= {gate['max_ratio']}x "
+                f"{ref:.4f} OK")
+    if "max_value" in gate and value > gate["max_value"]:
+        raise GateError(f"{_fmt(gate)}: {gate['metric']} = {value:.4f} > "
+                        f"{gate['max_value']} — "
+                        f"{gate.get('why', 'above bound')}")
+    if "min_value" in gate and value < gate["min_value"]:
+        raise GateError(f"{_fmt(gate)}: {gate['metric']} = {value:.4f} < "
+                        f"{gate['min_value']} — "
+                        f"{gate.get('why', 'below bound')}")
+    if not any(k in gate for k in ("max_value", "min_value")):
+        raise InputError(f"{_fmt(gate)}: no known gate kind "
+                         f"(max_value/min_value/max_ratio/require/contains)")
+    return f"{_fmt(gate)}: {value:.4f} within bounds OK"
+
+
+def run_check(cfg: dict, only=None, overrides=None) -> list:
+    """Evaluate the configured gates; returns pass messages, raises on the
+    first failure.  ``only`` restricts to gates whose ``input`` is listed
+    (reference inputs still load — with schema refusal — as needed)."""
+    overrides = overrides or {}
+    gates = [g for g in cfg["gates"]
+             if only is None or g["input"] in only]
+    if only is not None and not gates:
+        raise InputError(f"no gates target inputs {sorted(only)}")
+    needed = {g["input"] for g in gates}
+    needed |= {g["ref_input"] for g in gates if "ref_input" in g}
+    inputs = {}
+    for name in sorted(needed):
+        if name not in cfg["inputs"]:
+            raise InputError(f"gate references undeclared input {name!r}")
+        inputs[name] = load_input(name, cfg["inputs"][name], overrides)
+    return [check_gate(g, inputs) for g in gates]
+
+
+# ---------------------------------------------------------------------------
+# trajectory mode
+# ---------------------------------------------------------------------------
+
+def load_trajectory(path: str) -> list:
+    try:
+        with open(path) as f:
+            lines = [ln for ln in f if ln.strip()]
+    except OSError as e:
+        raise InputError(f"trajectory {path}: {e}")
+    rows = []
+    for i, ln in enumerate(lines):
+        try:
+            row = json.loads(ln)
+        except json.JSONDecodeError as e:
+            raise InputError(f"trajectory {path} line {i + 1}: {e}")
+        if row.get("schema") != TRAJECTORY_SCHEMA:
+            raise InputError(
+                f"trajectory {path} line {i + 1}: unknown schema "
+                f"{row.get('schema')!r} (want {TRAJECTORY_SCHEMA!r})")
+        rows.append(row)
+    return rows
+
+
+def check_trajectory(cfg: dict, path: str, window=None) -> list:
+    """Fail on monotone worsening of a configured metric across the last
+    ``window`` trajectory rows (each step up AND total growth beyond
+    ``total_frac`` — single noisy rows never trip it)."""
+    tcfg = cfg.get("trajectory", {})
+    window = window or int(tcfg.get("window", 4))
+    total_frac = float(tcfg.get("total_frac", 0.25))
+    rows = load_trajectory(path)
+    msgs = []
+    for metric in tcfg.get("metrics", []):
+        series = []
+        for row in rows:
+            try:
+                series.append(float(resolve(row.get("metrics", {}), metric)))
+            except KeyError:
+                continue            # metric not in this row (older schema)
+        tail = series[-window:]
+        if len(tail) < window:
+            msgs.append(f"{metric}: only {len(tail)}/{window} rows, skipped")
+            continue
+        rising = all(b > a for a, b in zip(tail, tail[1:]))
+        growth = tail[-1] / max(tail[0], 1e-12) - 1.0
+        if rising and growth > total_frac:
+            raise GateError(
+                f"trajectory: {metric} rose monotonically over the last "
+                f"{window} runs ({', '.join(f'{v:.3f}' for v in tail)}; "
+                f"+{growth:.0%} > {total_frac:.0%}) — a slow-creep "
+                f"regression the single-baseline gates cannot see")
+        msgs.append(f"{metric}: last {window} rows "
+                    f"{', '.join(f'{v:.3f}' for v in tail)} OK")
+    return msgs
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", default=GATES_TOML)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    chk = sub.add_parser("check", help="evaluate the configured gates")
+    chk.add_argument("--only", default=None,
+                     help="comma-separated input names to gate")
+    chk.add_argument("overrides", nargs="*", metavar="name=path",
+                     help="override an input's path (e.g. store_ci=X.json)")
+    trj = sub.add_parser("trajectory", help="check the bench trend file")
+    trj.add_argument("path", help="BENCH_TRAJECTORY.jsonl")
+    trj.add_argument("--window", type=int, default=None)
+    args = ap.parse_args(argv)
+    try:
+        cfg = load_config(args.config)
+        if args.cmd == "check":
+            overrides = {}
+            for ov in args.overrides:
+                if "=" not in ov:
+                    raise InputError(f"override {ov!r} is not name=path")
+                k, _, v = ov.partition("=")
+                overrides[k] = v
+            only = set(args.only.split(",")) if args.only else None
+            msgs = run_check(cfg, only=only, overrides=overrides)
+        else:
+            msgs = check_trajectory(cfg, args.path, window=args.window)
+    except GateError as e:
+        print(f"GATE FAILED: {e}", file=sys.stderr)
+        return 1
+    except InputError as e:
+        print(f"BAD INPUT: {e}", file=sys.stderr)
+        return 2
+    for m in msgs:
+        print(m)
+    print(f"{len(msgs)} checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -52,6 +52,23 @@ def write_json(path: str, schema: str, rows, value_key: str = "us_per_call",
         json.dump(payload, f, indent=1)
 
 
+def append_trajectory(path: str, rows, smoke: bool) -> None:
+    """Append one timestamped metrics row to the bench-trend JSONL.
+
+    Every ``run.py --json`` invocation adds ``{ts, schema, smoke,
+    metrics: {row name: value}}``; ``check_gates.py trajectory`` diffs the
+    last N rows and fails on monotone regression — the slow-creep drift a
+    single committed baseline can never catch."""
+    row = {
+        "schema": "bloomrf-trajectory/v1",
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "smoke": bool(smoke),
+        "metrics": {n: float(u) for n, u, _ in rows},
+    }
+    with open(path, "a") as f:
+        f.write(json.dumps(row) + "\n")
+
+
 def gen_keys(n: int, dist: str, rng: np.random.Generator) -> np.ndarray:
     if dist == "uniform":
         return rng.integers(0, 1 << 63, n, dtype=np.uint64)

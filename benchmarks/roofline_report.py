@@ -1,5 +1,13 @@
 """Render the dry-run roofline table (results/dryrun.json) as CSV rows and
-derive MODEL_FLOPS / usefulness ratios per cell (EXPERIMENTS.md §Roofline)."""
+derive MODEL_FLOPS / usefulness ratios per cell (EXPERIMENTS.md §Roofline).
+
+Also emits the analytic ``roofline/store_scan/megakernel`` row (no dry-run
+needed): the store-scan Pallas kernel's arithmetic intensity over a
+representative LSM run pyramid, demonstrating the kernel is
+bandwidth-bound — its per-batch filter-state DMA dominates its
+compare/gather flops by orders of magnitude, so fusing the scan plane
+into one kernel (PR 7) buys exactly what the roofline says it should:
+the HBM streaming time, with the Python/dispatch time gone."""
 import json
 import os
 
@@ -10,9 +18,56 @@ from repro.models.params import count_params
 from .common import emit
 
 PEAK_FLOPS = 197e12
+PEAK_HBM_BPS = 1.2e12           # HBM bandwidth model constant (bytes/s)
 
 _RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
                         "dryrun.json")
+
+
+def store_scan_entry():
+    """Analytic roofline row for the store-scan megakernel.
+
+    Models the fused kernel's per-batch traffic and flops over the LSM
+    pyramid the YCSB-E bench builds (4 level-0 runs at class 0 plus one
+    run each at the next two classes, ``SCAN_BATCH`` queries per batch):
+
+    * bytes  — every run's padded filter row streams HBM->VMEM once per
+      query tile (the flash-decoding grid), plus fences, bounds, and the
+      two bool output planes;
+    * flops  — each query gathers ``range_gather_width`` lanes per run
+      and combines them with a handful of mask/compare ops per lane.
+
+    The resulting intensity is a few flops per byte — far below any
+    TPU's compute/bandwidth ridge — so the memory term dominates and the
+    kernel is bandwidth-bound by construction."""
+    from repro.core import basic_layout
+    from repro.core.engine import ProbeEngine, _filter_for_layout
+
+    from . import store_bench as sb
+
+    classes = [0, 0, 0, 0, 1, 2]            # representative run pyramid
+    layouts = [basic_layout(32, sb.MEMTABLE * sb.FANOUT ** c, sb.BPK,
+                            delta=6) for c in classes]
+    B, tile = sb.SCAN_BATCH, 256
+    rowpad = max(lay.total_u32 for lay in layouts)
+    R = len(layouts)
+    q_tiles = max(B // tile, 1)
+    bytes_moved = (q_tiles * R * rowpad * 4    # filter blocks, once/tile
+                   + 2 * R * 4                 # kmin/kmax fences
+                   + 2 * B * 4                 # lo/hi bounds
+                   + 2 * B * R)                # fence+touch outputs
+    lanes = sum(ProbeEngine(_filter_for_layout(lay)).range_gather_width
+                for lay in layouts)
+    flops = B * lanes * 6                      # shift/mask/cmp/or per lane
+    t_mem = bytes_moved / PEAK_HBM_BPS
+    t_comp = flops / PEAK_FLOPS
+    bound = max(t_mem, t_comp)
+    return emit(
+        "roofline/store_scan/megakernel", bound * 1e6,
+        f"dom={'memory' if t_mem >= t_comp else 'compute'};"
+        f"intensity={flops / bytes_moved:.3f}flop/B;"
+        f"mem={t_mem:.3e};comp={t_comp:.3e};"
+        f"runs={R};rowpad_u32={rowpad};batch={B}")
 
 
 def model_flops(arch: str, shape_name: str) -> float:
@@ -33,7 +88,7 @@ def model_flops(arch: str, shape_name: str) -> float:
 
 
 def run():
-    rows = []
+    rows = [store_scan_entry()]
     if not os.path.exists(_RESULTS):
         rows.append(emit("roofline/missing", 0.0,
                          "run repro.launch.dryrun first"))

@@ -42,6 +42,11 @@ def main() -> None:
                     help="tiny sizes for CI / quick local sanity runs")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write emitted rows as JSON to PATH")
+    ap.add_argument("--trajectory", default="BENCH_TRAJECTORY.jsonl",
+                    metavar="PATH",
+                    help="bench-trend JSONL appended to on every --json "
+                         "run ('' disables); check_gates.py trajectory "
+                         "fails on monotone regression over the last rows")
     args = ap.parse_args()
 
     from . import (fig08_space, fig09_ranges, fig10_space_budget,
@@ -69,9 +74,11 @@ def main() -> None:
     elapsed = time.time() - t0
     print(f"# total {elapsed:.1f}s", file=sys.stderr)
     if args.json:
-        from .common import write_json
+        from .common import append_trajectory, write_json
         write_json(args.json, SCHEMA, rows, smoke=args.smoke,
                    only=sorted(only) if only else None, elapsed_s=elapsed)
+        if args.trajectory:
+            append_trajectory(args.trajectory, rows, args.smoke)
 
 
 if __name__ == "__main__":

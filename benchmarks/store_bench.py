@@ -19,7 +19,15 @@ Reported per setting:
   min/max-fence-only baseline every filter must beat,
 * ``scan FP-read rate``     — touched runs that held nothing in range,
 * ``bytes not read``        — data bytes the pruning saved,
-* ``us/op``                 — wall time of the mixed phase.
+* ``us/op``                 — for the device-capable backends (``bloomrf``
+  / ``none``) the **device-resident probe-plane time per scan**: the scan
+  bound stream is encoded to device arrays up front, every batch goes
+  through ``Store.scan_probe_device`` (one fused megakernel / XLA gather
+  per batch), and the per-op pruning counters accumulate as device
+  scalars — no per-op host hops, so the row finally times the kernel
+  instead of the Python materialisation loop.  The old host mixed-phase
+  wall time survives as ``host_us_per_op`` in the per-setting metrics.
+  Host-side baseline backends still report the host path.
 
 Backends: ``bloomrf`` (stacked one-gather probes), ``none`` (fences
 only), plus host-side baselines from ``repro.filters``; the ``float``
@@ -50,7 +58,10 @@ from repro.core import u32_to_float32
 
 from .common import emit, gen_keys, write_json
 
-SCHEMA = "bloomrf-store-bench/v1"
+SCHEMA = "bloomrf-store-bench/v2"   # v2: us_per_op = device probe plane
+                                    # for bloomrf/none (host_us_per_op
+                                    # keeps the old v1 measurement)
+DEVICE_BACKENDS = ("bloomrf", "none")   # rows timed device-resident
 
 # sizes (patched by benchmarks.run --smoke / --smoke here)
 N = 200_000          # load-phase keys
@@ -182,7 +193,53 @@ def run_one(backend: str, dist: str, seed: int = 0x57043) -> tuple:
             handle.put(as_key(k), 0)
         done_ins = owed
     dt = time.perf_counter() - t0
-    return handle, dt / max(n_scans + n_ins, 1) * 1e6
+    return handle, dt / max(n_scans + n_ins, 1) * 1e6, data
+
+
+def run_device_one(handle, dist: str, data: np.ndarray,
+                   seed: int = 0x57043) -> tuple:
+    """Device-resident YCSB-E scan phase: ``(us_per_scan, device metrics)``.
+
+    The whole scan-bound stream is encoded to device arrays before the
+    clock starts; the timed loop slices device arrays, dispatches one
+    fused pruning call per ``SCAN_BATCH`` (``Store.scan_probe_device`` —
+    the megakernel on TPU, the jit'd StackedProbe fence+gather on CPU),
+    and folds the per-op stats (runs touched, fence passes, data bytes a
+    reader would fetch) into device scalar accumulators.  Nothing crosses
+    back to the host until the final ``block_until_ready`` — the row
+    measures device time, not Python dispatch."""
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed ^ 0xDE1CE)
+    n_scans = max(int(OPS * SCAN_FRAC) // SCAN_BATCH, 1) * SCAN_BATCH
+    lo = _scan_starts(n_scans, dist, data, rng)
+    clo, chi = handle.encode_scan_bounds(lo, _scan_bounds(lo, dist))
+    store = handle.store
+    dbytes = jnp.asarray([r.data_bytes(store.cfg.value_bytes)
+                          for r in store.live_runs()], jnp.int64)
+    def step(acc, s):
+        f, t = handle.scan_probe_device(clo[s:s + SCAN_BATCH],
+                                        chi[s:s + SCAN_BATCH])
+        return (acc[0] + t.sum(dtype=jnp.int64),
+                acc[1] + f.sum(dtype=jnp.int64),
+                acc[2] + (t.sum(axis=0, dtype=jnp.int64) * dbytes).sum())
+
+    zero = (jnp.zeros((), jnp.int64),) * 3
+    jax.block_until_ready(step(zero, 0))    # compile probe + accumulators
+    acc = zero
+    t0 = time.perf_counter()
+    for s in range(0, n_scans, SCAN_BATCH):
+        acc = step(acc, s)
+    jax.block_until_ready(acc)
+    dt = time.perf_counter() - t0
+    touched, fenced, readable = acc
+    return dt / n_scans * 1e6, {
+        "scans": n_scans,
+        "runs_probed_per_scan": float(touched) / n_scans,
+        "fence_pass_per_scan": float(fenced) / n_scans,
+        "bytes_touched_per_scan": float(readable) / n_scans,
+    }
 
 
 def metrics(handle, us_per_op: float) -> dict:
@@ -279,16 +336,23 @@ def run(section: dict | None = None):
     for dist in DISTS:
         backends = FLOAT_BACKENDS if dist == "float" else BACKENDS
         for backend in backends:
-            handle, us = run_one(backend, dist)
-            m = metrics(handle, us)
+            handle, host_us, data = run_one(backend, dist)
+            m = metrics(handle, host_us)
+            detail = (f"runs/scan={m['runs_probed_per_scan']:.3f};"
+                      f"fp={m['scan_fp_read_rate']:.3f};"
+                      f"runs={m['runs_live']};"
+                      f"bytes_saved={m['bytes_not_read_frac']:.3f}")
+            us = host_us
+            if backend in DEVICE_BACKENDS:
+                us, dm = run_device_one(handle, dist, data)
+                m["us_per_op"] = us
+                m["host_us_per_op"] = host_us
+                m.update({f"device_{k}": v for k, v in dm.items()})
+                detail += (f";host_us={host_us:.1f};"
+                           f"dev_runs/scan={dm['runs_probed_per_scan']:.3f}")
             if section is not None:
                 section[f"{dist}/{backend}"] = m
-            rows.append(emit(
-                f"store/{dist}/{backend}", us,
-                f"runs/scan={m['runs_probed_per_scan']:.3f};"
-                f"fp={m['scan_fp_read_rate']:.3f};"
-                f"runs={m['runs_live']};"
-                f"bytes_saved={m['bytes_not_read_frac']:.3f}"))
+            rows.append(emit(f"store/{dist}/{backend}", us, detail))
     for mutability in CHURN_MUTABILITIES:
         _, m = run_churn_one(mutability)
         if section is not None:

@@ -775,7 +775,12 @@ class TypedStore(_Handle):
             bits_per_key=spec.resolved_bits_per_key(),
             delta=min(delta, codec.d), fanout=spec.fanout,
             level0_runs=spec.level0_runs,
-            filter_backend=spec.store_backend, seed=spec.seed,
+            filter_backend=spec.store_backend,
+            # spec.backend='xla' pins the StackedProbe scan plane; any
+            # other backend lets the store pick the fused scan megakernel
+            # on TPU (kernels/store_scan.py)
+            scan_backend="xla" if spec.backend == "xla" else "auto",
+            seed=spec.seed,
             mutability=spec.mutability,
             purge_dead_frac=spec.purge_dead_frac), _warn=False)
         self._buckets = self.codec.name == "str"
@@ -863,6 +868,23 @@ class TypedStore(_Handle):
             return [(float(self.codec.decode(np.uint64(c))), v)
                     for c, v in rows]
         return rows
+
+    # -- device-resident probe plane (YCSB device driver) -----------------
+    def encode_scan_bounds(self, los, his):
+        """Typed scan bounds -> device code arrays in the store's key dtype
+        (the operand format :meth:`scan_probe_device` takes)."""
+        import jax.numpy as jnp
+
+        clo, chi = self.codec.encode_bounds(np.asarray(los), np.asarray(his))
+        kd = self.store.kdtype
+        return jnp.asarray(clo, kd), jnp.asarray(chi, kd)
+
+    def scan_probe_device(self, clo, chi):
+        """Device-resident scan pruning over encoded bounds: ``(fence,
+        touch)`` (B, R) bool jax arrays, no host round-trip.  Verdicts are
+        at code level (for lossy string codes a touched run may still
+        post-filter to empty)."""
+        return self.store.scan_probe_device(clo, chi)
 
     # -- introspection ----------------------------------------------------
     @property

@@ -11,8 +11,11 @@ from .probe import (point_probe_partitioned, point_probe_resident,
                     point_probe_stacked_resident)
 from .rangeprobe import (range_probe_partitioned, range_probe_resident,
                          range_probe_stacked_resident)
+from .store_scan import build_run_stack, store_scan_probe
 
 __all__ = [
+    "store_scan_probe",
+    "build_run_stack",
     "FilterOps",
     "DEFAULT_VMEM_BUDGET_U32",
     "read_vmem_budget_u32",

@@ -1,0 +1,191 @@
+"""Pallas TPU megakernel: the LSM store scan-pruning plane in ONE kernel.
+
+``Store.scan_many`` used to round-trip host Python between four device
+steps: the StackedProbe plan, the one fused gather over all live runs'
+filter blocks, the combine/mask algebra, and the min/max fence masking
+(computed separately in numpy).  This kernel fuses the whole plane —
+fence compare, plan, gather, combine, touch masking — into a single
+``pallas_call`` per scan batch with a flash-decoding-style grid:
+
+* the **query axis** is tiled as usual (``tile`` queries per step);
+* the **run axis** is split into *blocks* of ``runs_per_block`` stacked
+  filter rows, the way flash decoding splits KV into chunks — each
+  ``(query_tile, run_block)`` grid step answers one tile against one
+  block of runs and writes a disjoint output sub-matrix, so no
+  cross-block combine is needed.  The per-block filter state is DMA'd
+  HBM -> VMEM by the BlockSpec pipeline, which double-buffers the next
+  block's transfer behind the current block's compute (the standard
+  Pallas grid pipeline); a store whose whole run stack exceeds the VMEM
+  budget still scans with every filter block streamed exactly once per
+  query tile.
+
+Mixed capacity classes are the normal LSM case (level-0 runs share the
+smallest class, each lower level is one fanout bigger), so run rows have
+*different* layouts.  Rows are padded to one uniform ``rowpad`` lane
+width and the kernel body selects the right combine algebra per block
+through a **scalar-prefetched block-type table**: ``btype[rb]`` (SMEM)
+indexes a ``lax.switch`` over the distinct per-block layout tuples, each
+branch tracing that block's :class:`~repro.core.engine.StackedProbe`
+(one fused gather per tile per block).  Uniform stacks skip the switch.
+
+Fences ride along as per-run ``uint32`` key bounds; padding rows carry
+the empty fence ``(kmin, kmax) = (2^32-1, 0)`` so they can never be
+touched.  Verdicts are bit-identical to
+``StackedProbe.touch_all`` (the XLA-exact fallback) by construction:
+same plan, same gather lanes (shifted by the padded row bases), same
+combine, same fence compare — asserted per layout class in
+``tests/test_store_scan_kernel.py``.
+
+Layout restrictions: all rows share one key domain ``d <= 32`` and no
+exact segment (the store's capacity-class ladder satisfies both by
+construction); other stacks use the XLA path (``Store`` dispatches).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.engine import stacked_probe
+from .rangeprobe import _check_range_kernel_layout
+
+__all__ = ["store_scan_probe", "build_run_stack", "DEFAULT_TILE"]
+
+DEFAULT_TILE = 256           # scan queries per grid step
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def build_run_stack(states) -> jax.Array:
+    """Pad per-run filter states to one uniform ``(R, rowpad)`` stack.
+
+    Zero-padding is safe: padded lanes sit past every row's addressable
+    lane range, so no planned gather ever lands in them."""
+    rowpad = max(int(s.shape[0]) for s in states)
+    return jnp.stack([jnp.pad(s, (0, rowpad - s.shape[0])) for s in states])
+
+
+def _block_probes(layouts, rpb: int, rowpad: int):
+    """Per-run-block StackedProbe branches + the block-type table.
+
+    Blocks are consecutive ``rpb``-row slices of the run stack; a block
+    whose tail crosses ``R`` is padded by repeating its last layout (the
+    padding rows' empty fences keep their verdicts unreachable).  Returns
+    ``(probes, btype)`` where ``probes[btype[rb]]`` combines block
+    ``rb``'s rows at the padded row bases ``(0, rowpad, 2*rowpad, ...)``.
+    """
+    nblocks = _round_up(len(layouts), rpb) // rpb
+    bases = tuple(i * rowpad for i in range(rpb))
+    kinds, btype = {}, []
+    for b in range(nblocks):
+        lays = list(layouts[b * rpb:(b + 1) * rpb])
+        lays += [lays[-1]] * (rpb - len(lays))
+        key = tuple(lays)
+        if key not in kinds:
+            kinds[key] = len(kinds)
+        btype.append(kinds[key])
+    probes = [stacked_probe(key, bases) for key in kinds]
+    return probes, btype
+
+
+def _store_scan_kernel(btype_ref, lo_ref, hi_ref, kmin_ref, kmax_ref,
+                       stack_ref, fence_ref, touch_ref, *, probes):
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    kmin = kmin_ref[...]
+    kmax = kmax_ref[...]
+    # min/max fence masking fused with the probe: a run is touched only
+    # where the query interval overlaps its key range AND its filter says
+    # "maybe"
+    fence = (hi[:, None] >= kmin[None, :]) & (lo[:, None] <= kmax[None, :])
+    state = stack_ref[...].reshape(-1)
+    if len(probes) == 1:
+        filt = probes[0]._range_all(state, lo, hi)
+    else:
+        # scalar-prefetched block-type table: pick this run block's
+        # combine algebra (distinct layout mixes trace distinct branches)
+        rb = pl.program_id(1)
+        filt = jax.lax.switch(btype_ref[rb],
+                              [p._range_all for p in probes], state, lo, hi)
+    fence_ref[...] = fence
+    touch_ref[...] = fence & filt
+
+
+@functools.partial(jax.jit, static_argnums=(0, 6, 7, 8))
+def store_scan_probe(layouts, stack: jax.Array, kmin, kmax, lo, hi,
+                     tile: int = DEFAULT_TILE, runs_per_block: int = 0,
+                     interpret: bool = True):
+    """Fused store-scan pruning: ``(fence, touch)`` in one kernel call.
+
+    ``layouts`` is the static per-run layout tuple, ``stack`` the
+    ``uint32[R, rowpad]`` padded filter stack (:func:`build_run_stack`),
+    ``kmin``/``kmax`` the per-run key fences, ``lo``/``hi`` the scan
+    bounds (clamped into the ``d``-bit domain by the caller).  Returns
+    ``(fence, touch)``, both ``bool[B, R]`` — exactly what
+    ``StackedProbe.touch_all`` returns, from a single ``pallas_call``
+    whatever the run mix (jaxpr-asserted in the test suite).
+
+    ``runs_per_block`` splits the run axis into VMEM-sized filter blocks
+    (0 = whole stack resident); the grid is ``(B/tile, R/runs_per_block)``
+    and the Pallas pipeline double-buffers each block's HBM DMA behind
+    the previous block's compute.
+    """
+    R = len(layouts)
+    if R == 0:
+        raise ValueError("need at least one run row")
+    d = layouts[0].d
+    rowpad = int(stack.shape[1])
+    for lay in layouts:
+        _check_range_kernel_layout(lay)
+        if lay.d != d:
+            raise ValueError("store-scan rows must share one key domain")
+        if lay.total_u32 > rowpad:
+            raise ValueError(f"stack rowpad {rowpad} < layout lanes "
+                             f"{lay.total_u32}")
+    rpb = min(runs_per_block, R) if runs_per_block > 0 else R
+    nblocks = _round_up(R, rpb) // rpb
+    Rp = nblocks * rpb
+    probes, btype = _block_probes(layouts, rpb, rowpad)
+
+    lo = jnp.atleast_1d(jnp.asarray(lo, jnp.uint32))
+    hi = jnp.atleast_1d(jnp.asarray(hi, jnp.uint32))
+    B = lo.shape[0]
+    tile = min(tile, _round_up(max(B, 1), 8))
+    Bp = _round_up(max(B, 1), tile)
+    lo_p = jnp.pad(lo, (0, Bp - B))
+    hi_p = jnp.pad(hi, (0, Bp - B))
+    stack_p = jnp.pad(jnp.asarray(stack, jnp.uint32), ((0, Rp - R), (0, 0)))
+    # padding rows get the empty fence: kmin > kmax rejects every query
+    kmin_p = jnp.pad(jnp.asarray(kmin, jnp.uint32), (0, Rp - R),
+                     constant_values=jnp.uint32(0xFFFFFFFF))
+    kmax_p = jnp.pad(jnp.asarray(kmax, jnp.uint32), (0, Rp - R))
+    btype_arr = jnp.asarray(btype, jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Bp // tile, nblocks),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda t, rb, bt: (t,)),
+            pl.BlockSpec((tile,), lambda t, rb, bt: (t,)),
+            pl.BlockSpec((rpb,), lambda t, rb, bt: (rb,)),
+            pl.BlockSpec((rpb,), lambda t, rb, bt: (rb,)),
+            pl.BlockSpec((rpb, rowpad), lambda t, rb, bt: (rb, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, rpb), lambda t, rb, bt: (t, rb)),
+            pl.BlockSpec((tile, rpb), lambda t, rb, bt: (t, rb)),
+        ],
+    )
+    fence, touch = pl.pallas_call(
+        functools.partial(_store_scan_kernel, probes=probes),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((Bp, Rp), jnp.bool_),
+                   jax.ShapeDtypeStruct((Bp, Rp), jnp.bool_)],
+        interpret=interpret,
+    )(btype_arr, lo_p, hi_p, kmin_p, kmax_p, stack_p)
+    return fence[:B, :R], touch[:B, :R]

@@ -40,12 +40,15 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core import basic_layout, key_dtype_for
 from ..core.engine import _filter_for_layout, stacked_probe
-from ..kernels import FilterOps
+from ..kernels import FilterOps, read_vmem_budget_u32
+from ..kernels.store_scan import DEFAULT_TILE as STORE_SCAN_TILE
+from ..kernels.store_scan import build_run_stack, store_scan_probe
 from .compaction import merge_filter_state, merge_sorted_runs
 from .memtable import TOMBSTONE, Memtable
 from .run import Run
@@ -64,6 +67,16 @@ def _baseline_factory(name: str):
     }[name]
 
 
+@jax.jit
+def _fence_touch_device(kmin, kmax, lo, hi):
+    """Fence-only pruning plane (``filter_backend="none"``): every fenced
+    run is touched."""
+    lo = jnp.atleast_1d(lo)
+    hi = jnp.atleast_1d(hi)
+    fence = ((hi[:, None] >= kmin[None, :]) & (lo[:, None] <= kmax[None, :]))
+    return fence, fence
+
+
 @dataclasses.dataclass(frozen=True)
 class StoreConfig:
     d: int = 32                     # key-domain bits
@@ -73,6 +86,13 @@ class StoreConfig:
     fanout: int = 4                 # capacity-class / level size ratio
     level0_runs: int = 4            # level-0 run count that triggers compaction
     filter_backend: str = "bloomrf"  # "bloomrf" | "none" | repro.filters name
+    scan_backend: str = "auto"      # scan-pruning plane: "auto" | "kernel"
+                                    # | "xla" — "kernel" runs the fused
+                                    # store-scan Pallas megakernel
+                                    # (kernels/store_scan.py), "xla" the
+                                    # StackedProbe.touch_all reference,
+                                    # "auto" picks the kernel on TPU only
+                                    # (interpret-mode Pallas is slow on CPU)
     use_insert_kernels: bool = False  # route rebuilds through FilterOps.insert
     value_bytes: int = 64           # per-entry data-block size for accounting
     seed: int = 0x0B100F11
@@ -111,6 +131,9 @@ class StoreConfig:
                              f"got {self.promote_density_slack}")
         if self.filter_backend not in ("bloomrf", "none"):
             _baseline_factory(self.filter_backend)  # raises on unknown name
+        if self.scan_backend not in ("auto", "kernel", "xla"):
+            raise ValueError(f"scan_backend must be 'auto', 'kernel' or "
+                             f"'xla', got {self.scan_backend!r}")
 
 
 @dataclasses.dataclass
@@ -182,6 +205,9 @@ class Store:
         self._runs: List[Run] = []
         self._flat = None                     # stacked filter lanes
         self._probe = None
+        self._kmins = self._kmaxs = None      # per-run fences, np.uint64 (R,)
+        self._kstate = None                   # lazy megakernel inputs
+        self._fence_dev = None                # lazy device fences (kdtype)
         self._dirty = True
 
     # ------------------------------------------------------------------
@@ -350,6 +376,9 @@ class Store:
             return
         self._runs = [r for lvl in self.levels for r in lvl]
         self._flat = self._probe = None
+        self._kstate = self._fence_dev = None
+        self._kmins = np.asarray([r.kmin for r in self._runs], np.uint64)
+        self._kmaxs = np.asarray([r.kmax for r in self._runs], np.uint64)
         if self._runs and self.cfg.filter_backend == "bloomrf":
             states = [r.state for r in self._runs]
             self._flat = (states[0] if len(states) == 1
@@ -363,9 +392,8 @@ class Store:
 
     def _fence_mask(self, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
         """(B, R) bool: query interval overlaps the run's [kmin, kmax]."""
-        kmins = np.asarray([r.kmin for r in self._runs], np.uint64)
-        kmaxs = np.asarray([r.kmax for r in self._runs], np.uint64)
-        return (hi[:, None] >= kmins[None, :]) & (lo[:, None] <= kmaxs[None, :])
+        return ((hi[:, None] >= self._kmins[None, :])
+                & (lo[:, None] <= self._kmaxs[None, :]))
 
     def _filter_mask(self, lo: np.ndarray, hi: np.ndarray,
                      point: bool) -> np.ndarray:
@@ -410,6 +438,106 @@ class Store:
         filt = self._filter_mask(np.minimum(lo, dmax), np.minimum(hi, dmax),
                                  point)
         return fence, filt
+
+    # ------------------------------------------------------------------
+    # fused scan-pruning plane (fence ∧ filter in one device step)
+    # ------------------------------------------------------------------
+    def _scan_kernel_mode(self) -> str:
+        """Resolve ``cfg.scan_backend`` for the current run stack.
+
+        The megakernel handles bloomRF stacks in the uint32 key domain
+        (the capacity-class ladder never emits exact-bitmap layouts, so
+        d <= 32 is the only real constraint); everything else takes the
+        XLA-exact path.  ``auto`` picks the kernel only on a real TPU —
+        interpret-mode Pallas on CPU is for parity tests, not speed."""
+        if (self.cfg.scan_backend == "xla"
+                or self.cfg.filter_backend != "bloomrf"
+                or self.cfg.d > 32 or not self._runs):
+            return "xla"
+        if self.cfg.scan_backend == "kernel":
+            return "kernel"
+        return "kernel" if jax.default_backend() == "tpu" else "xla"
+
+    def _kernel_inputs(self):
+        """Megakernel operands for the live stack, built once per refresh:
+        the padded ``(R, rowpad)`` run stack, uint32 device fences, and a
+        ``runs_per_block`` split sized so one filter block fits the VMEM
+        budget (the Pallas grid pipeline streams blocks beyond it)."""
+        if self._kstate is None:
+            layouts = tuple(r.layout for r in self._runs)
+            stack = build_run_stack([r.state for r in self._runs])
+            rowpad, R = int(stack.shape[1]), len(self._runs)
+            budget = read_vmem_budget_u32()
+            rpb = R if rowpad * R <= budget else max(1, budget // rowpad)
+            self._kstate = (layouts, stack,
+                            jnp.asarray(self._kmins, jnp.uint32),
+                            jnp.asarray(self._kmaxs, jnp.uint32), int(rpb))
+        return self._kstate
+
+    def _touch_masks(self, lo: np.ndarray,
+                     hi: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Host scan pruning: ``(fence, touch)`` (B, R) bool.
+
+        ``touch = fence & filter-maybe`` — the runs whose data blocks a
+        scan must read.  Dispatches per ``_scan_kernel_mode``: one fused
+        Pallas call, or the XLA fence+probe reference (bit-identical)."""
+        self._refresh()
+        if not self._runs:
+            z = np.zeros((len(lo), 0), bool)
+            return z, z
+        if self._scan_kernel_mode() == "kernel":
+            dmax = np.uint64((1 << self.cfg.d) - 1)
+            layouts, stack, kmin_d, kmax_d, rpb = self._kernel_inputs()
+            f, t = store_scan_probe(
+                layouts, stack, kmin_d, kmax_d,
+                jnp.asarray(np.minimum(lo, dmax), jnp.uint32),
+                jnp.asarray(np.minimum(hi, dmax), jnp.uint32),
+                STORE_SCAN_TILE, rpb, jax.default_backend() != "tpu")
+            fence, touch = np.asarray(f), np.asarray(t)
+            # the uint32 clamp is exact for every in-domain `lo` (kmin,
+            # kmax <= dmax); intervals entirely above the domain must be
+            # fenced off on the host instead (kmax <= dmax < lo)
+            dead = lo > dmax
+            if dead.any():
+                fence, touch = fence.copy(), touch.copy()
+                fence[dead] = touch[dead] = False
+            return fence, touch
+        fence, filt = self.probe_runs(lo, hi, point=False)
+        return fence, fence & filt
+
+    def scan_probe_device(self, lo, hi) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Device-resident scan pruning: ``(fence, touch)`` (B, R) bool
+        jax arrays, no host round-trip — the YCSB device driver's probe
+        plane.  Bounds must already lie inside the d-bit key domain
+        (``scan_many`` handles out-of-domain clamping on the host).
+
+        One fused megakernel call in ``kernel`` mode; the jit'd
+        ``StackedProbe.touch_all`` (still one fused gather) in ``xla``
+        mode; fence-only verdicts for ``filter_backend="none"``."""
+        self._refresh()
+        lo = jnp.atleast_1d(lo)
+        if not self._runs:
+            z = jnp.zeros((lo.shape[0], 0), bool)
+            return z, z
+        if self._scan_kernel_mode() == "kernel":
+            layouts, stack, kmin_d, kmax_d, rpb = self._kernel_inputs()
+            return store_scan_probe(layouts, stack, kmin_d, kmax_d, lo, hi,
+                                    STORE_SCAN_TILE, rpb,
+                                    jax.default_backend() != "tpu")
+        if self._fence_dev is None:
+            self._fence_dev = (jnp.asarray(self._kmins, self.kdtype),
+                               jnp.asarray(self._kmaxs, self.kdtype))
+        kmin_d, kmax_d = self._fence_dev
+        lo = jnp.asarray(lo, self.kdtype)
+        hi = jnp.asarray(hi, self.kdtype)
+        if self.cfg.filter_backend == "bloomrf":
+            return self._probe.touch_all(self._flat, kmin_d, kmax_d, lo, hi)
+        if self.cfg.filter_backend == "none":
+            fence, touch = _fence_touch_device(kmin_d, kmax_d, lo, hi)
+            return fence, touch
+        raise ValueError(
+            f"device scan probing needs the 'bloomrf' or 'none' backend, "
+            f"not {self.cfg.filter_backend!r} (host-side baseline)")
 
     # ------------------------------------------------------------------
     # read path
@@ -458,15 +586,17 @@ class Store:
         return self.scan_many([lo], [hi])[0]
 
     def scan_many(self, los, his) -> list:
-        """Batched scans: one fused filter gather for the whole batch."""
+        """Batched scans: the whole pruning plane (fence + filter) in one
+        device dispatch for the batch — a single megakernel call or one
+        fused XLA gather, per ``StoreConfig.scan_backend``."""
         los = np.atleast_1d(np.asarray(los, np.uint64))
         his = np.atleast_1d(np.asarray(his, np.uint64))
-        fence, filt = self.probe_runs(los, his, point=False)
-        return [self._scan_one(int(lo), int(hi), fence[b], filt[b])
+        fence, touch = self._touch_masks(los, his)
+        return [self._scan_one(int(lo), int(hi), fence[b], touch[b])
                 for b, (lo, hi) in enumerate(zip(los, his))]
 
     def _scan_one(self, lo: int, hi: int, fence: np.ndarray,
-                  filt: np.ndarray) -> list:
+                  touch: np.ndarray) -> list:
         st = self.stats
         st.scans += 1
         seen = set()
@@ -479,9 +609,9 @@ class Store:
         R = len(self._runs)
         st.scan_runs_considered += R
         st.scan_fence_skips += int((~fence).sum())
-        st.scan_filter_skips += int((fence & ~filt).sum())
+        st.scan_filter_skips += int((fence & ~touch).sum())
         for r_idx, run in enumerate(self._runs):
-            if not (fence[r_idx] and filt[r_idx]):
+            if not touch[r_idx]:
                 st.bytes_not_read += run.data_bytes(self.cfg.value_bytes)
                 continue
             st.scan_runs_touched += 1

@@ -1,0 +1,216 @@
+"""CI gate harness (benchmarks/check_gates.py): the threshold logic that
+used to live as inline ci.yml python steps, now unit-tested — pass, fail,
+malformed input, unknown-schema refusal, and the trajectory trend check."""
+import json
+
+import pytest
+
+from benchmarks import check_gates as cg
+
+TOML = """
+schema = "bloomrf-gates/v1"
+
+[inputs.bench]
+path = "%(bench)s"
+schemas = ["bloomrf-bench/v1"]
+value_key = "us_per_call"
+
+[inputs.base]
+path = "%(base)s"
+schemas = ["bloomrf-bench/v1"]
+value_key = "us_per_call"
+
+[[gates]]
+name = "abs bound"
+input = "bench"
+metric = "rows.kernels/probe.us_per_call"
+max_value = 10.0
+
+[[gates]]
+name = "vs baseline"
+input = "bench"
+metric = "rows.kernels/probe.us_per_call"
+max_ratio = 1.5
+ref_input = "base"
+ref_metric = "rows.kernels/probe.us_per_call"
+
+[[gates]]
+name = "row present"
+input = "bench"
+metric = "rows.kernels/probe"
+require = true
+
+[[gates]]
+name = "marker"
+input = "bench"
+metric = "rows.roofline/x.derived"
+contains = "dom=memory"
+
+[[gates]]
+name = "floor"
+input = "bench"
+metric = "meta.skip_rate"
+min_value = 0.1
+
+[trajectory]
+window = 3
+total_frac = 0.25
+metrics = ["kernels/probe"]
+"""
+
+
+def _bench(us=5.0, derived="dom=memory;i=0.1", skip=0.5,
+           schema="bloomrf-bench/v1"):
+    return {"schema": schema, "meta": {"skip_rate": skip},
+            "rows": [{"name": "kernels/probe", "us_per_call": us,
+                      "derived": "x"},
+                     {"name": "roofline/x", "us_per_call": 1.0,
+                      "derived": derived}]}
+
+
+@pytest.fixture
+def setup(tmp_path):
+    """Write config + two bench JSONs; returns (config_path, paths, rewrite)."""
+    paths = {"bench": tmp_path / "bench.json", "base": tmp_path / "base.json"}
+
+    def write(name, payload):
+        paths[name].write_text(json.dumps(payload))
+
+    write("bench", _bench())
+    write("base", _bench(us=4.0))
+    cfg = tmp_path / "gates.toml"
+    cfg.write_text(TOML % {k: str(v) for k, v in paths.items()})
+    return cfg, paths, write
+
+
+def _run(cfg, *argv):
+    return cg.main(["--config", str(cfg), *argv])
+
+
+def test_all_gates_pass(setup, capsys):
+    cfg, _, _ = setup
+    assert _run(cfg, "check") == 0
+    assert "5 checks passed" in capsys.readouterr().out
+
+
+def test_max_value_fail(setup, capsys):
+    cfg, _, write = setup
+    write("bench", _bench(us=11.0))
+    assert _run(cfg, "check") == 1
+    assert "abs bound" in capsys.readouterr().err
+
+
+def test_max_ratio_fail_and_slack(setup):
+    cfg, _, write = setup
+    write("bench", _bench(us=6.5))          # > 1.5 * 4.0
+    assert _run(cfg, "check") == 1
+    write("base", _bench(us=5.0))           # 6.5 <= 1.5 * 5.0
+    assert _run(cfg, "check") == 0
+
+
+def test_require_fail(setup):
+    cfg, _, write = setup
+    payload = _bench()
+    payload["rows"][0]["name"] = "kernels/renamed"
+    write("bench", payload)
+    assert _run(cfg, "check") == 1
+
+
+def test_contains_fail(setup, capsys):
+    cfg, _, write = setup
+    write("bench", _bench(derived="dom=compute;i=9"))
+    assert _run(cfg, "check") == 1
+    assert "dom=memory" in capsys.readouterr().err
+
+
+def test_min_value_fail(setup):
+    cfg, _, write = setup
+    write("bench", _bench(skip=0.0))
+    assert _run(cfg, "check") == 1
+
+
+def test_unknown_schema_refused(setup, capsys):
+    """A format drift must exit 2 before any gate can vacuously pass."""
+    cfg, _, write = setup
+    write("bench", _bench(schema="bloomrf-bench/v99"))
+    assert _run(cfg, "check") == 2
+    assert "refusing" in capsys.readouterr().err
+
+
+def test_malformed_inputs(setup):
+    cfg, paths, write = setup
+    paths["bench"].write_text("{not json")
+    assert _run(cfg, "check") == 2
+    write("bench", {"schema": "bloomrf-bench/v1", "rows": []})
+    assert _run(cfg, "check") == 2          # empty rows
+    write("bench", {"schema": "bloomrf-bench/v1",
+                    "rows": [{"name": "kernels/probe",
+                              "us_per_call": "fast"}]})
+    assert _run(cfg, "check") == 2          # non-numeric value_key
+    paths["bench"].unlink()
+    assert _run(cfg, "check") == 2          # missing file
+
+
+def test_only_filter_and_override(setup, tmp_path):
+    cfg, _, _ = setup
+    other = tmp_path / "other.json"
+    other.write_text(json.dumps(_bench(us=11.0)))
+    # bad values in an overridden artifact fail, --only scopes the gate set
+    assert _run(cfg, "check", "--only", "bench", f"bench={other}") == 1
+    assert _run(cfg, "check", "--only", "nosuch") == 2
+
+
+def test_bad_gates_config(tmp_path):
+    cfg = tmp_path / "gates.toml"
+    cfg.write_text('schema = "bloomrf-gates/v99"\n')
+    assert _run(cfg, "check") == 2
+    cfg.write_text('schema = "bloomrf-gates/v1"\n[inputs.x]\npath = "x"\n')
+    assert _run(cfg, "check") == 2          # missing [[gates]]
+
+
+def _traj_file(tmp_path, values, schema="bloomrf-trajectory/v1"):
+    p = tmp_path / "traj.jsonl"
+    p.write_text("".join(
+        json.dumps({"schema": schema, "ts": f"t{i}", "smoke": True,
+                    "metrics": {"kernels/probe": v}}) + "\n"
+        for i, v in enumerate(values)))
+    return p
+
+
+def test_trajectory_pass_noise_and_short(setup, tmp_path, capsys):
+    cfg, _, _ = setup
+    # non-monotone wiggle: never fails, whatever the growth
+    p = _traj_file(tmp_path, [5.0, 9.0, 4.0, 9.5])
+    assert _run(cfg, "trajectory", str(p)) == 0
+    # monotone but under total_frac: noise guard holds
+    p = _traj_file(tmp_path, [5.0, 5.1, 5.2])
+    assert _run(cfg, "trajectory", str(p)) == 0
+    # fewer rows than the window: skipped, not failed
+    p = _traj_file(tmp_path, [5.0])
+    assert _run(cfg, "trajectory", str(p)) == 0
+    assert "skipped" in capsys.readouterr().out
+
+
+def test_trajectory_monotone_regression_fails(setup, tmp_path, capsys):
+    cfg, _, _ = setup
+    p = _traj_file(tmp_path, [2.0, 5.0, 6.0, 7.5])   # window=3 tail rises 50%
+    assert _run(cfg, "trajectory", str(p)) == 1
+    assert "monotonically" in capsys.readouterr().err
+
+
+def test_trajectory_unknown_schema(setup, tmp_path):
+    cfg, _, _ = setup
+    p = _traj_file(tmp_path, [1.0], schema="bloomrf-trajectory/v9")
+    assert _run(cfg, "trajectory", str(p)) == 2
+
+
+def test_live_gates_toml_loads():
+    """The committed gates.toml parses and every gate references a
+    declared input and a known gate kind."""
+    cfg = cg.load_config()
+    kinds = ("max_value", "min_value", "max_ratio", "require", "contains")
+    for g in cfg["gates"]:
+        assert g["input"] in cfg["inputs"], g
+        assert any(k in g for k in kinds), g
+        if "ref_input" in g:
+            assert g["ref_input"] in cfg["inputs"], g
