@@ -34,6 +34,13 @@ only), plus host-side baselines from ``repro.filters``; the ``float``
 distribution runs bloomrf vs none only (the CI gate compares its pruning
 against the committed uniform row).
 
+The ``store/recovery/*`` rows measure the durability subsystem
+(DESIGN.md §14): WAL-on vs WAL-off put-path us/op (the append-before-ack
+tax, CI-gated ≤1.3x), checkpoint-reopen time through ``Store.open``, and
+a degraded-scan drill that corrupts one run's filter block and requires
+the quarantined (fence-only) scan results to match an uncorrupted
+control exactly.
+
 The ``store/churn/*`` rows measure filters under deletion churn
 (DESIGN.md §12): load, measure the absent-key FPR, run a 50/50
 put/delete phase over the same seeded op stream, re-measure.
@@ -81,6 +88,8 @@ CHURN_OPS = 40_000   # churn-phase op count
 CHURN_DELETE_FRAC = 0.6   # delete-heavy churn (the FPR-drift stressor)
 CHURN_PURGE_DEAD = 0.15   # deletable: dead fraction forcing a purge rebuild
 CHURN_MUTABILITIES = ("deletable", "insert_only")
+RECOVERY_OPS = 30_000     # durable-load op count (WAL-on vs WAL-off rows)
+RECOVERY_SCANS = 256      # degraded-scan drill batch
 
 
 def _f32_keys(codes: np.ndarray, rng) -> np.ndarray:
@@ -330,6 +339,87 @@ def run_churn_one(mutability: str, seed: int = 0x57043) -> tuple:
     return handle, m
 
 
+def run_recovery(seed: int = 0x57043) -> dict:
+    """``store/recovery`` metrics: the WAL write-path tax, reopen time,
+    and the degraded-scan correctness drill (DESIGN.md §14).
+
+    The same seeded put stream loads a WAL-off control store and a durable
+    (``durability="wal"``) twin rooted in a temp dir; the us/op ratio is
+    the append-before-ack tax the WAL charges every write (gated ≤1.3x in
+    CI).  The durable twin then checkpoints, writes a post-checkpoint WAL
+    tail, closes, and ``Store.open`` recovery is timed (snapshot restore
+    + WAL replay).  The degraded drill snapshots the control, flips bits
+    in one run's packed filter block, restores (checksum mismatch →
+    quarantine, fence-only pruning for that row), and counts scan-result
+    mismatches against the uncorrupted control — gated to exactly zero.
+    """
+    import copy
+    import tempfile
+
+    from repro.store import Store, StoreConfig
+    from repro.store.faults import flip_filter_bits
+
+    rng = np.random.default_rng(seed ^ 0x5EC0)
+    keys = rng.integers(0, 1 << 31, RECOVERY_OPS, dtype=np.uint64)
+    base = dict(d=32, memtable_limit=MEMTABLE, level0_runs=LEVEL0,
+                fanout=FANOUT, bits_per_key=BPK, delta=6)
+
+    def load(cfg):
+        st = Store(cfg, _warn=False)
+        t0 = time.perf_counter()
+        for i, k in enumerate(keys):
+            st.put(int(k), i)
+        return st, (time.perf_counter() - t0) / len(keys) * 1e6
+
+    # warm the flush/compaction jit cache so neither timed load pays compile
+    warm = Store(StoreConfig(**base), _warn=False)
+    for k in range(MEMTABLE + 1):
+        warm.put(k, 0)
+
+    ctrl, us_off = load(StoreConfig(**base))
+    with tempfile.TemporaryDirectory() as wal_dir:
+        st, us_on = load(StoreConfig(**base, durability="wal",
+                                     wal_dir=wal_dir))
+        st.checkpoint()
+        tail = rng.integers(0, 1 << 31, max(RECOVERY_OPS // 20, 1),
+                            dtype=np.uint64)
+        for i, k in enumerate(tail):        # post-checkpoint WAL tail
+            st.put(int(k), i)
+        st.close()
+        t0 = time.perf_counter()
+        rec = Store.open(wal_dir)
+        reopen_ms = (time.perf_counter() - t0) * 1e3
+        replayed = rec.stats.wal_replayed
+        rec.close()
+
+    # degraded-scan drill: quarantined filter block must change nothing
+    ctrl.flush()
+    snap = ctrl.snapshot()
+    hurt_snap = copy.deepcopy(snap)
+    encs = [e for lvl in hurt_snap["levels"] for e in lvl if "filter" in e]
+    victim = encs[int(rng.integers(0, len(encs)))]
+    bad = flip_filter_bits(victim, rng, nbits=3)
+    hurt_snap["levels"] = [[bad if e is victim else e for e in lvl]
+                           for lvl in hurt_snap["levels"]]
+    clean = Store.restore(snap)
+    hurt = Store.restore(hurt_snap)
+    lo = _scan_starts(RECOVERY_SCANS, "uniform", keys, rng)
+    hi = _scan_bounds(lo, "uniform")
+    mismatches = sum(a != b for a, b in zip(clean.scan_many(lo, hi),
+                                            hurt.scan_many(lo, hi)))
+    return {
+        "wal_on_us_per_op": us_on,
+        "wal_off_us_per_op": us_off,
+        "wal_overhead": us_on / max(us_off, 1e-9),
+        "reopen_ms": reopen_ms,
+        "reopen_us_per_record": reopen_ms * 1e3 / max(replayed, 1),
+        "wal_replayed": replayed,
+        "quarantined_runs": len(hurt.quarantined_runs()),
+        "degraded_probes": int(hurt.stats.degraded_probes),
+        "degraded_scan_mismatches": int(mismatches),
+    }
+
+
 def run(section: dict | None = None):
     """Bench rows (+ per-setting metrics into ``section`` when given)."""
     rows = []
@@ -364,6 +454,21 @@ def run(section: dict | None = None):
             f"runs/scan={m['runs_probed_per_scan']:.3f};"
             f"promote={m['promote_merges']};"
             f"purge={m['purge_rebuilds']}"))
+    r = run_recovery()
+    if section is not None:
+        section["recovery"] = r
+    rows.append(emit(
+        "store/recovery/wal_on", r["wal_on_us_per_op"],
+        f"overhead={r['wal_overhead']:.3f};"
+        f"replayed={r['wal_replayed']}"))
+    rows.append(emit(
+        "store/recovery/wal_off", r["wal_off_us_per_op"],
+        "wal-off control (same seeded put stream)"))
+    rows.append(emit(
+        "store/recovery/reopen", r["reopen_us_per_record"],
+        f"reopen_ms={r['reopen_ms']:.1f};"
+        f"quarantined={r['quarantined_runs']};"
+        f"degraded_mismatches={r['degraded_scan_mismatches']}"))
     return rows
 
 

@@ -256,6 +256,10 @@ class FilterSpec:
     level0_runs: int = 4
     purge_dead_frac: float = 0.25           # deletable store: dead fraction
                                             # forcing a purge rebuild
+    durability: str = "none"                # store: "none" | "wal" (crash-safe
+                                            # WAL + checkpoint/recovery)
+    wal_dir: Optional[str] = None           # store durable root (WAL +
+                                            # snapshots + manifest)
 
     def __post_init__(self):
         def bad(msg):
@@ -321,6 +325,14 @@ class FilterSpec:
         if not (0.0 < self.purge_dead_frac <= 1.0):
             bad(f"purge_dead_frac must be in (0, 1], "
                 f"got {self.purge_dead_frac}")
+        if self.durability not in ("none", "wal"):
+            bad(f"durability must be 'none' or 'wal', "
+                f"got {self.durability!r}")
+        if self.durability == "wal" and self.placement != "store":
+            bad("durability='wal' is a store placement feature (resident "
+                "filters rebuild from their source of truth instead)")
+        if self.durability == "wal" and not self.wal_dir:
+            bad("durability='wal' requires wal_dir")
 
     # -- derived sizing ---------------------------------------------------
     def resolved_bits_per_key(self) -> float:
@@ -782,7 +794,9 @@ class TypedStore(_Handle):
             scan_backend="xla" if spec.backend == "xla" else "auto",
             seed=spec.seed,
             mutability=spec.mutability,
-            purge_dead_frac=spec.purge_dead_frac), _warn=False)
+            purge_dead_frac=spec.purge_dead_frac,
+            durability=spec.durability,
+            wal_dir=spec.wal_dir), _warn=False)
         self._buckets = self.codec.name == "str"
 
     # -- write path -------------------------------------------------------
@@ -822,6 +836,20 @@ class TypedStore(_Handle):
 
     def flush(self) -> None:
         self.store.flush()
+
+    # -- durability (FilterSpec(durability='wal', wal_dir=...)) -----------
+    def checkpoint(self) -> str:
+        """Publish a durable checkpoint (snapshot + manifest, WAL reset);
+        see ``Store.checkpoint``.  Returns the snapshot path."""
+        return self.store.checkpoint()
+
+    def scrub(self, sample_keys: int = 64, seed: int = 0) -> dict:
+        """Integrity pass over every live run (``Store.scrub``)."""
+        return self.store.scrub(sample_keys=sample_keys, seed=seed)
+
+    def close(self) -> None:
+        """Release the WAL file handle (the store stays readable)."""
+        self.store.close()
 
     # -- read path --------------------------------------------------------
     def get(self, key):

@@ -470,34 +470,44 @@ class StackedProbe:
             out.append(jnp.all(bits == 1, axis=-1))
         return jnp.concatenate(out, axis=-1)              # (B, R)
 
-    def _touch_all(self, flat_state: jax.Array, kmin, kmax, lo, hi):
+    def _touch_all(self, flat_state: jax.Array, kmin, kmax, lo, hi,
+                   quarantine=None):
         """Fence-fused range probe: the full store scan-pruning plane.
 
         ``kmin``/``kmax`` are per-row key fences (shape ``(R,)``, key
         dtype).  Returns ``(fence, touch)``, both ``(B, R)`` bool:
         ``fence`` is interval overlap with the row's key range and
         ``touch = fence & filter_verdict`` — the data blocks a scan must
-        actually read.  This is the XLA-exact reference the store-scan
-        Pallas megakernel (``kernels/store_scan.py``) is bit-identical
-        to; everything (fence compare, the one fused gather, combine,
-        masking) stays on device in one jit.  Bounds must already be
-        clamped into the filters' key domain (the store dispatch clamps
-        and zeroes rows whose query lies entirely above the domain)."""
+        actually read.  ``quarantine`` (optional ``(R,)`` bool) marks rows
+        whose filter block failed its checksum (DESIGN.md §14): their
+        filter verdict is forced to "maybe", degrading that row to
+        fence-only pruning — a corrupted filter must never skip a run it
+        might cover (that would be a false negative).  This is the
+        XLA-exact reference the store-scan Pallas megakernel
+        (``kernels/store_scan.py``) is bit-identical to; everything
+        (fence compare, the one fused gather, combine, masking) stays on
+        device in one jit.  Bounds must already be clamped into the
+        filters' key domain (the store dispatch clamps and zeroes rows
+        whose query lies entirely above the domain)."""
         lo = jnp.atleast_1d(jnp.asarray(lo))
         hi = jnp.atleast_1d(jnp.asarray(hi))
         kmin = jnp.asarray(kmin, lo.dtype)
         kmax = jnp.asarray(kmax, lo.dtype)
         fence = ((hi[:, None] >= kmin[None, :])
                  & (lo[:, None] <= kmax[None, :]))
-        return fence, fence & self._range_all(flat_state, lo, hi)
+        filt = self._range_all(flat_state, lo, hi)
+        if quarantine is not None:
+            filt = filt | jnp.asarray(quarantine, bool)[None, :]
+        return fence, fence & filt
 
     def range_all(self, flat_state: jax.Array, lo, hi) -> jax.Array:
         """(B, R) bool: per-row range verdicts from one fused gather."""
         return self._range_jit(flat_state, lo, hi)
 
-    def touch_all(self, flat_state: jax.Array, kmin, kmax, lo, hi):
+    def touch_all(self, flat_state: jax.Array, kmin, kmax, lo, hi,
+                  quarantine=None):
         """(fence, touch) ``(B, R)`` bool pair — see :meth:`_touch_all`."""
-        return self._touch_jit(flat_state, kmin, kmax, lo, hi)
+        return self._touch_jit(flat_state, kmin, kmax, lo, hi, quarantine)
 
     def point_all(self, flat_state: jax.Array, ys) -> jax.Array:
         """(B, R) bool: per-row point verdicts from one fused gather."""

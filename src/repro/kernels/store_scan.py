@@ -93,8 +93,9 @@ def _block_probes(layouts, rpb: int, rowpad: int):
     return probes, btype
 
 
-def _store_scan_kernel(btype_ref, lo_ref, hi_ref, kmin_ref, kmax_ref,
-                       stack_ref, fence_ref, touch_ref, *, probes):
+def _store_scan_kernel(btype_ref, quar_ref, lo_ref, hi_ref, kmin_ref,
+                       kmax_ref, stack_ref, fence_ref, touch_ref, *,
+                       probes, rpb):
     lo = lo_ref[...]
     hi = hi_ref[...]
     kmin = kmin_ref[...]
@@ -104,22 +105,27 @@ def _store_scan_kernel(btype_ref, lo_ref, hi_ref, kmin_ref, kmax_ref,
     # "maybe"
     fence = (hi[:, None] >= kmin[None, :]) & (lo[:, None] <= kmax[None, :])
     state = stack_ref[...].reshape(-1)
+    rb = pl.program_id(1)
     if len(probes) == 1:
         filt = probes[0]._range_all(state, lo, hi)
     else:
         # scalar-prefetched block-type table: pick this run block's
         # combine algebra (distinct layout mixes trace distinct branches)
-        rb = pl.program_id(1)
         filt = jax.lax.switch(btype_ref[rb],
                               [p._range_all for p in probes], state, lo, hi)
+    # scalar-prefetched quarantine mask (SMEM): rows whose filter block
+    # failed its checksum take the always-touch branch — the corrupted
+    # filter's verdict is discarded and the row degrades to fence-only
+    # pruning (a flipped bit must never skip a run: no false negatives)
+    quar = jnp.stack([quar_ref[rb * rpb + i] != 0 for i in range(rpb)])
     fence_ref[...] = fence
-    touch_ref[...] = fence & filt
+    touch_ref[...] = fence & (filt | quar[None, :])
 
 
 @functools.partial(jax.jit, static_argnums=(0, 6, 7, 8))
 def store_scan_probe(layouts, stack: jax.Array, kmin, kmax, lo, hi,
                      tile: int = DEFAULT_TILE, runs_per_block: int = 0,
-                     interpret: bool = True):
+                     interpret: bool = True, quarantine=None):
     """Fused store-scan pruning: ``(fence, touch)`` in one kernel call.
 
     ``layouts`` is the static per-run layout tuple, ``stack`` the
@@ -134,6 +140,11 @@ def store_scan_probe(layouts, stack: jax.Array, kmin, kmax, lo, hi,
     (0 = whole stack resident); the grid is ``(B/tile, R/runs_per_block)``
     and the Pallas pipeline double-buffers each block's HBM DMA behind
     the previous block's compute.
+
+    ``quarantine`` (optional ``(R,)`` bool/int mask) rides along as a
+    second scalar-prefetch operand: a True row's filter verdict is forced
+    to "maybe" inside the kernel, degrading it to fence-only pruning —
+    bit-identical to ``touch_all``'s quarantine handling.
     """
     R = len(layouts)
     if R == 0:
@@ -165,27 +176,34 @@ def store_scan_probe(layouts, stack: jax.Array, kmin, kmax, lo, hi,
                      constant_values=jnp.uint32(0xFFFFFFFF))
     kmax_p = jnp.pad(jnp.asarray(kmax, jnp.uint32), (0, Rp - R))
     btype_arr = jnp.asarray(btype, jnp.int32)
+    # the quarantine mask is the second scalar-prefetch operand (SMEM);
+    # padding rows get 0 — their empty fence already rejects every query
+    if quarantine is None:
+        quar_arr = jnp.zeros((Rp,), jnp.int32)
+    else:
+        quar_arr = jnp.pad(
+            jnp.asarray(quarantine).astype(jnp.int32), (0, Rp - R))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(Bp // tile, nblocks),
         in_specs=[
-            pl.BlockSpec((tile,), lambda t, rb, bt: (t,)),
-            pl.BlockSpec((tile,), lambda t, rb, bt: (t,)),
-            pl.BlockSpec((rpb,), lambda t, rb, bt: (rb,)),
-            pl.BlockSpec((rpb,), lambda t, rb, bt: (rb,)),
-            pl.BlockSpec((rpb, rowpad), lambda t, rb, bt: (rb, 0)),
+            pl.BlockSpec((tile,), lambda t, rb, bt, q: (t,)),
+            pl.BlockSpec((tile,), lambda t, rb, bt, q: (t,)),
+            pl.BlockSpec((rpb,), lambda t, rb, bt, q: (rb,)),
+            pl.BlockSpec((rpb,), lambda t, rb, bt, q: (rb,)),
+            pl.BlockSpec((rpb, rowpad), lambda t, rb, bt, q: (rb, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((tile, rpb), lambda t, rb, bt: (t, rb)),
-            pl.BlockSpec((tile, rpb), lambda t, rb, bt: (t, rb)),
+            pl.BlockSpec((tile, rpb), lambda t, rb, bt, q: (t, rb)),
+            pl.BlockSpec((tile, rpb), lambda t, rb, bt, q: (t, rb)),
         ],
     )
     fence, touch = pl.pallas_call(
-        functools.partial(_store_scan_kernel, probes=probes),
+        functools.partial(_store_scan_kernel, probes=probes, rpb=rpb),
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((Bp, Rp), jnp.bool_),
                    jax.ShapeDtypeStruct((Bp, Rp), jnp.bool_)],
         interpret=interpret,
-    )(btype_arr, lo_p, hi_p, kmin_p, kmax_p, stack_p)
+    )(btype_arr, quar_arr, lo_p, hi_p, kmin_p, kmax_p, stack_p)
     return fence[:B, :R], touch[:B, :R]

@@ -101,20 +101,39 @@ class PrefixCacheIndex:
         if backing_store is not None:
             self.attach_store(backing_store)
 
-    def attach_store(self, store: Store) -> None:
+    def attach_store(self, store: Store, backfill: bool = True) -> None:
         """Use an LSM run-store as the cold tier behind the segments.
 
-        Segments frozen before attachment are backfilled, so the cold
-        tier always mirrors every frozen entry — ``lookup``'s fallthrough
-        and ``evict_window``'s cold sweep rely on that invariant."""
+        Segments frozen before attachment are backfilled (``backfill=True``
+        default), so the cold tier always mirrors every frozen entry —
+        ``lookup``'s fallthrough and ``evict_window``'s cold sweep rely on
+        that invariant.  Pass ``backfill=False`` when the store *already*
+        holds the frozen entries, i.e. when re-attaching a recovered cold
+        tier (:meth:`reopen_cold_tier`) whose durable state is the mirror."""
         if store.cfg.d < _SES_BITS + _CHUNK_BITS:
             raise ValueError(
                 f"backing store needs a >= {_SES_BITS + _CHUNK_BITS}-bit "
                 f"domain for packed keys, got d={store.cfg.d}")
         self.store = store
-        for seg in self.segments:
-            for k, pages in seg.entries.items():
-                store.put(k, pages)
+        if backfill:
+            for seg in self.segments:
+                for k, pages in seg.entries.items():
+                    store.put(k, pages)
+
+    def reopen_cold_tier(self, wal_dir: str, config=None) -> Store:
+        """Recover a durable cold tier from ``wal_dir`` and attach it.
+
+        Routes through ``Store.open`` — manifest + snapshot CRCs verified,
+        torn WAL tail healed, acknowledged writes replayed — so a serving
+        process restarted after a crash resumes with the cold tier it had
+        acked, including eviction tombstones (a lost tombstone would
+        resurrect an evicted prefix).  Runs whose filter block rotted come
+        back quarantined: lookups stay exact, just less pruned.  The
+        recovered store is attached without backfill (its durable state
+        *is* the mirror) and returned."""
+        store = Store.open(wal_dir, config=config)
+        self.attach_store(store, backfill=False)
+        return store
 
     # -- session-namespace routing (scalar ints and numpy arrays alike) --
     def _tenant(self, session):

@@ -10,9 +10,12 @@ live runs' filters with ONE fused gather over the stacked state
 (``core.engine.StackedProbe``) before touching any run's data.
 """
 from .compaction import merge_filter_state, merge_sorted_runs
+from .faults import FaultPlan, InjectedCrash, fault_seed_from_env
+from .integrity import read_manifest, run_checksums, write_manifest
 from .memtable import TOMBSTONE, Memtable
 from .run import Run
 from .store import Store, StoreConfig, StoreStats
+from .wal import WAL_FILENAME, Wal
 
 __all__ = [
     "Memtable",
@@ -23,4 +26,12 @@ __all__ = [
     "StoreStats",
     "merge_sorted_runs",
     "merge_filter_state",
+    "Wal",
+    "WAL_FILENAME",
+    "FaultPlan",
+    "InjectedCrash",
+    "fault_seed_from_env",
+    "run_checksums",
+    "read_manifest",
+    "write_manifest",
 ]

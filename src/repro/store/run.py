@@ -11,6 +11,17 @@ filter's set-bit positions are sorted integer lists, so the on-disk form
 is two Elias-Fano posting lists (``n * (2 + log2(u/n))`` bits each)
 instead of raw ``u32`` dumps — :meth:`Run.pack` / :meth:`Run.unpack`
 round-trip bit-exactly.
+
+v3 snapshots carry per-component CRC32s (``store/integrity.py``) over
+the keys, fences, values, and decoded filter state.  :meth:`Run.unpack`
+verifies them: a key/fence/value mismatch is unrecoverable data
+corruption and raises an actionable ``ValueError``, while a filter-block
+mismatch (or an undecodable filter payload) *quarantines* the run —
+``quarantined=True`` makes the store's probe plane treat the row as
+always-maybe (fence-only pruning), because a corrupted filter may
+answer "no" for a stored key and a false negative is the one failure a
+filter must never produce.  Scans through a quarantined run stay exact,
+just less pruned (DESIGN.md §14).
 """
 from __future__ import annotations
 
@@ -24,24 +35,25 @@ import numpy as np
 from ..core import FilterLayout
 from ..dist.compression import (elias_fano_decode, elias_fano_encode,
                                 pack_filter_state, unpack_filter_state)
+from .integrity import run_checksums, state_crc32, verify_component
 from .memtable import TOMBSTONE
 
 __all__ = ["Run"]
 
-_SNAPSHOT_SCHEMA = "bloomrf-run/v2"
-_ACCEPTED_SCHEMAS = ("bloomrf-run/v1", "bloomrf-run/v2")
+_SNAPSHOT_SCHEMA = "bloomrf-run/v3"
+_ACCEPTED_SCHEMAS = ("bloomrf-run/v1", "bloomrf-run/v2", "bloomrf-run/v3")
 
 
 class Run:
     """One immutable sorted run with its filter block and fences."""
 
     __slots__ = ("keys", "vals", "tombs", "level", "layout", "state", "alt",
-                 "promotions")
+                 "promotions", "quarantined", "_crcs")
 
     def __init__(self, keys: np.ndarray, vals: list, tombs: np.ndarray,
                  level: int, layout: FilterLayout,
                  state: Optional[jax.Array], alt=None,
-                 promotions: int = 0):
+                 promotions: int = 0, quarantined: bool = False):
         keys = np.asarray(keys, np.uint64)
         if keys.ndim != 1 or len(keys) == 0:
             raise ValueError("a run needs a non-empty 1-D key vector")
@@ -63,6 +75,10 @@ class Run:
         # source count — the store caps hops (promote_max_hops) to keep
         # that bounded.
         self.promotions = int(promotions)
+        # a quarantined run's filter block failed its checksum: the probe
+        # plane must treat the row as always-maybe (fence-only pruning)
+        self.quarantined = bool(quarantined)
+        self._crcs: Optional[dict] = None
 
     # -- fences ----------------------------------------------------------
     @property
@@ -83,6 +99,31 @@ class Run:
     def data_bytes(self, value_bytes: int = 64) -> int:
         """Accounting size of the run's data blocks (not the filter)."""
         return len(self.keys) * (8 + value_bytes)
+
+    # -- integrity -------------------------------------------------------
+    def checksums(self) -> dict:
+        """Per-component CRC32s, computed once and cached.
+
+        The store computes these eagerly at run construction
+        (flush/compaction), so the cached values are the *build-time*
+        reference :meth:`verify` and ``Store.scrub`` compare against."""
+        if self._crcs is None:
+            self._crcs = run_checksums(self.keys, self.vals, self.tombs,
+                                       self.kmin, self.kmax,
+                                       state=self.state)
+        return self._crcs
+
+    def verify(self) -> dict:
+        """Recompute every component CRC against the cached reference.
+
+        Returns ``{component: bool}``; a missing reference (never
+        checksummed) verifies vacuously true."""
+        ref = self._crcs
+        fresh = run_checksums(self.keys, self.vals, self.tombs,
+                              self.kmin, self.kmax, state=self.state)
+        if ref is None:
+            return {k: True for k in fresh}
+        return {k: verify_component(ref, k, v) for k, v in fresh.items()}
 
     # -- data-block reads (the part the filters try to avoid) ------------
     def lookup(self, key: int) -> Tuple[bool, object, bool]:
@@ -107,6 +148,9 @@ class Run:
         ``TOMBSTONE`` sentinel — the sentinel only round-trips by object
         identity and would make the snapshot unserializable to real bytes.
         ``unpack`` restores the canonical sentinel from the tombstone mask.
+
+        v3 adds the per-component ``crc`` dict (build-time reference when
+        the run was checksummed at construction, else computed now).
         """
         enc = {
             "schema": _SNAPSHOT_SCHEMA,
@@ -118,26 +162,106 @@ class Run:
             "tombs": np.packbits(self.tombs),
             "n": len(self.keys),
             "promotions": self.promotions,
+            "crc": dict(self.checksums()),
         }
+        if self.quarantined:
+            enc["quarantined"] = True
         if self.state is not None:
             enc["filter"] = pack_filter_state(np.asarray(self.state))
         return enc
 
     @classmethod
     def unpack(cls, enc: dict, alt=None) -> "Run":
+        """Validated inverse of :meth:`pack`.
+
+        Every malformed or corrupted input raises ``ValueError`` naming
+        what failed (never a segfault, never a silent mis-restore); the
+        one exception is a corrupt *filter block*, which degrades to a
+        quarantined run instead — see the module docstring."""
+        if not isinstance(enc, dict):
+            raise ValueError(f"run snapshot must be a dict, "
+                             f"got {type(enc).__name__}")
         if enc.get("schema") not in _ACCEPTED_SCHEMAS:
             raise ValueError(f"not a run snapshot: {enc.get('schema')!r}")
-        layout = FilterLayout(**enc["layout"])
-        n = enc["n"]
-        keys = elias_fano_decode(enc["keys"])
-        tombs = np.unpackbits(enc["tombs"])[:n].astype(bool)
+        # checksums are a v3 field: v1/v2 snapshots predate them and are
+        # accepted unverified whatever stray keys they carry
+        crcs = enc.get("crc") if enc.get("schema") == _SNAPSHOT_SCHEMA \
+            else None
+        if crcs is not None and not isinstance(crcs, dict):
+            raise ValueError("run snapshot: 'crc' must be a dict")
+        try:
+            layout = FilterLayout(**enc["layout"])
+        except Exception as e:
+            raise ValueError(f"run snapshot: bad filter layout: {e}") from e
+        try:
+            n = int(enc["n"])
+            level = int(enc["level"])
+            promotions = int(enc.get("promotions", 0))
+        except Exception as e:
+            raise ValueError(f"run snapshot: bad scalar field: {e}") from e
+        if n < 1:
+            raise ValueError(f"run snapshot: n must be >= 1, got {n}")
+        try:
+            keys = elias_fano_decode(enc["keys"])
+        except Exception as e:
+            raise ValueError(f"run snapshot: undecodable key list: {e}") from e
+        if len(keys) != n or keys.dtype != np.uint64:
+            raise ValueError(f"run snapshot: decoded {len(keys)} keys, "
+                             f"expected n={n}")
+        if len(keys) > 1 and (keys[1:] <= keys[:-1]).any():
+            raise ValueError("run snapshot: keys not strictly increasing "
+                             "(corrupted key posting list)")
+        kmin, kmax = int(keys[0]), int(keys[-1])
+        try:
+            tombs = np.unpackbits(np.asarray(enc["tombs"], np.uint8))[:n]
+            tombs = tombs.astype(bool)
+        except Exception as e:
+            raise ValueError(f"run snapshot: bad tombstone mask: {e}") from e
+        if len(tombs) != n:
+            raise ValueError(f"run snapshot: tombstone mask covers "
+                             f"{len(tombs)} entries, expected {n}")
+        enc_vals = enc["vals"]
+        if not isinstance(enc_vals, list) or len(enc_vals) != n:
+            raise ValueError(f"run snapshot: expected {n} values, got "
+                             f"{len(enc_vals) if isinstance(enc_vals, list) else type(enc_vals).__name__}")
+        # content verification (v3): keys / fences / values / tombstones
+        # are data — a mismatch is unrecoverable corruption and must not
+        # restore.  The vals CRC is computed against the *decoded* mask
+        # (live->tomb flips change the serialised form); tomb->live flips
+        # are invisible to it and caught by the tombs component instead.
+        fresh = run_checksums(keys, enc_vals, tombs, kmin, kmax)
+        for comp in ("keys", "fences", "vals", "tombs"):
+            if not verify_component(crcs, comp, fresh[comp]):
+                raise ValueError(
+                    f"run snapshot: {comp} CRC mismatch — the snapshot is "
+                    f"corrupted; restore from a previous checkpoint")
+        # filter block: corruption degrades (quarantine), never raises
         state = None
+        quarantined = bool(enc.get("quarantined", False))
         if "filter" in enc:
-            state = jnp.asarray(
-                unpack_filter_state(enc["filter"], layout.total_u32))
+            try:
+                state_np = unpack_filter_state(enc["filter"],
+                                               layout.total_u32)
+                if not verify_component(crcs, "filter",
+                                        state_crc32(state_np)):
+                    quarantined = True
+                state = jnp.asarray(state_np)
+            except Exception:
+                # undecodable filter payload: keep the run alive without a
+                # usable filter block (the store substitutes zeros and the
+                # quarantine mask keeps the row always-touch)
+                state = None
+                quarantined = True
         # the tombstone mask is authoritative (the memtable guarantees
         # vals[i] is the sentinel exactly where tombs[i]); restoring from it
         # also heals v1 snapshots whose vals hold stale sentinel objects
-        vals = [TOMBSTONE if t else v for v, t in zip(enc["vals"], tombs)]
-        return cls(keys, vals, tombs, enc["level"], layout,
-                   state, alt=alt, promotions=enc.get("promotions", 0))
+        vals = [TOMBSTONE if t else v for v, t in zip(enc_vals, tombs)]
+        try:
+            run = cls(keys, vals, tombs, level, layout,
+                      state, alt=alt, promotions=promotions,
+                      quarantined=quarantined)
+        except Exception as e:
+            raise ValueError(f"run snapshot: inconsistent run: {e}") from e
+        if crcs is not None and not quarantined:
+            run._crcs = dict(crcs)    # carry the build-time reference
+        return run

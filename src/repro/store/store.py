@@ -34,10 +34,24 @@ one-gather probes), ``"none"`` (min/max fences only — the pruning
 baseline), or any of the host-side baselines from ``repro.filters``
 (``"bloom"``, ``"prefix_bloom"``, ``"rosetta"``, ``"surf"``) for
 side-by-side comparisons in ``benchmarks/store_bench.py``.
+
+Durability (DESIGN.md §14): with ``durability="wal"`` every
+``put``/``delete``/``delete_many`` appends a CRC-framed record to a
+write-ahead log (``store/wal.py``) *before* the memtable acks it, and
+:meth:`Store.checkpoint` publishes a checksummed snapshot + manifest via
+atomic renames (``store/integrity.py``) before resetting the log —
+:meth:`Store.open` recovers the acknowledged state after a crash at any
+point.  Runs whose filter block fails its checksum are *quarantined*:
+the probe plane (XLA and megakernel alike) degrades them to fence-only
+pruning so scans stay exact (``StoreStats.degraded_probes``), because a
+corrupted filter is never allowed to produce a false negative.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
+import pickle
+import warnings
 from typing import List, Optional, Tuple
 
 import jax
@@ -50,8 +64,12 @@ from ..kernels import FilterOps, read_vmem_budget_u32
 from ..kernels.store_scan import DEFAULT_TILE as STORE_SCAN_TILE
 from ..kernels.store_scan import build_run_stack, store_scan_probe
 from .compaction import merge_filter_state, merge_sorted_runs
+from .faults import FaultPlan
+from .integrity import (MANIFEST_FILENAME, atomic_write_bytes, crc32_bytes,
+                        read_manifest, write_manifest)
 from .memtable import TOMBSTONE, Memtable
 from .run import Run
+from .wal import WAL_FILENAME, Wal
 
 __all__ = ["Store", "StoreConfig", "StoreStats"]
 
@@ -105,6 +123,12 @@ class StoreConfig:
     promote_density_slack: float = 1.5  # promote only when the OR-union's
                                     # per-layer density stays within this
                                     # factor of a rebuild's (compaction.py)
+    durability: str = "none"        # "none" | "wal" — "wal" appends every
+                                    # write to wal_dir/wal.log before acking
+                                    # and enables checkpoint()/Store.open()
+    wal_dir: Optional[str] = None   # durable root: WAL + snapshots + manifest
+    wal_sync: str = "flush"         # "flush" (crash-safe) | "always" (fsync
+                                    # per record — power-failure-safe, slow)
 
     def __post_init__(self):
         if not (1 <= self.d <= 64):
@@ -130,10 +154,22 @@ class StoreConfig:
             raise ValueError(f"promote_density_slack must be > 0, "
                              f"got {self.promote_density_slack}")
         if self.filter_backend not in ("bloomrf", "none"):
-            _baseline_factory(self.filter_backend)  # raises on unknown name
+            try:
+                _baseline_factory(self.filter_backend)
+            except KeyError:
+                raise ValueError(
+                    f"unknown filter_backend {self.filter_backend!r}") from None
         if self.scan_backend not in ("auto", "kernel", "xla"):
             raise ValueError(f"scan_backend must be 'auto', 'kernel' or "
                              f"'xla', got {self.scan_backend!r}")
+        if self.durability not in ("none", "wal"):
+            raise ValueError(f"durability must be 'none' or 'wal', "
+                             f"got {self.durability!r}")
+        if self.durability == "wal" and not self.wal_dir:
+            raise ValueError("durability='wal' requires wal_dir")
+        if self.wal_sync not in ("flush", "always"):
+            raise ValueError(f"wal_sync must be 'flush' or 'always', "
+                             f"got {self.wal_sync!r}")
 
 
 @dataclasses.dataclass
@@ -165,6 +201,13 @@ class StoreStats:
     # data-block bytes
     bytes_read: int = 0
     bytes_not_read: int = 0         # skipped runs' data bytes
+    # durability / degradation
+    wal_appends: int = 0            # records framed before acking a write
+    wal_replayed: int = 0           # records recovered at the last open
+    degraded_probes: int = 0        # (query, run) cells answered fence-only
+                                    # because the run is quarantined
+    kernel_fallbacks: int = 0       # scan batches retried through the XLA
+                                    # plane after a pallas_call dispatch error
 
     @property
     def runs_probed_per_scan(self) -> float:
@@ -190,7 +233,8 @@ class Store:
     """LSM key-value store with per-run bloomRF filter blocks."""
 
     def __init__(self, config: Optional[StoreConfig] = None, *,
-                 _warn: bool = True, **kw):
+                 faults: Optional[FaultPlan] = None,
+                 _warn: bool = True, _open_wal: bool = True, **kw):
         if _warn:
             from .._compat import warn_legacy
 
@@ -201,14 +245,37 @@ class Store:
         self.mem = Memtable()
         self.levels: List[List[Run]] = [[]]   # levels[0] newest-first
         self.stats = StoreStats()
+        self.faults = faults                  # fault-injection seams (tests)
         self._ops: dict = {}                  # FilterOps per layout
         self._runs: List[Run] = []
         self._flat = None                     # stacked filter lanes
         self._probe = None
         self._kmins = self._kmaxs = None      # per-run fences, np.uint64 (R,)
+        self._quar = None                     # per-run quarantine mask (R,)
+        self._quar_dev = None                 # lazy device copy of _quar
         self._kstate = None                   # lazy megakernel inputs
         self._fence_dev = None                # lazy device fences (kdtype)
         self._dirty = True
+        self._wal: Optional[Wal] = None
+        self._seq = 0                         # checkpoint sequence number
+        if self.cfg.durability == "wal" and _open_wal:
+            os.makedirs(self.cfg.wal_dir, exist_ok=True)
+            wal_path = os.path.join(self.cfg.wal_dir, WAL_FILENAME)
+            has_state = (
+                os.path.exists(os.path.join(self.cfg.wal_dir,
+                                            MANIFEST_FILENAME))
+                or (os.path.exists(wal_path)
+                    and os.path.getsize(wal_path) > 0))
+            if has_state:
+                raise ValueError(
+                    f"{self.cfg.wal_dir!r} already holds store state; "
+                    f"use Store.open({self.cfg.wal_dir!r}) to recover it")
+            self._wal = Wal(wal_path, sync=self.cfg.wal_sync).open_for_append()
+
+    def _fault(self, point: str) -> None:
+        """Pass through a named fault-injection seam (no-op without a plan)."""
+        if self.faults is not None:
+            self.faults.hit(point)
 
     # ------------------------------------------------------------------
     # capacity classes and filter construction
@@ -257,14 +324,26 @@ class Store:
             raise ValueError(f"key {key} outside the {self.cfg.d}-bit domain")
         return key
 
+    def _wal_append(self, op: str, key, value=None) -> None:
+        """Frame a record before the memtable acks (durable stores only)."""
+        if self._wal is None:
+            return
+        self._fault("wal.append")
+        self._wal.append(op, key, value)
+        self.stats.wal_appends += 1
+
     def put(self, key: int, value) -> None:
-        self.mem.put(self._check_key(key), value)
+        key = self._check_key(key)
+        self._wal_append("put", key, value)
+        self.mem.put(key, value)
         self.stats.puts += 1
         if len(self.mem) >= self.cfg.memtable_limit:
             self.flush()
 
     def delete(self, key: int) -> None:
-        self.mem.delete(self._check_key(key))
+        key = self._check_key(key)
+        self._wal_append("del", key)
+        self.mem.delete(key)
         self.stats.deletes += 1
         if len(self.mem) >= self.cfg.memtable_limit:
             self.flush()
@@ -273,12 +352,16 @@ class Store:
         """Batched deletes: every tombstone lands in the memtable before the
         single flush decision, so a large eviction sweep triggers at most one
         flush (plus its own compaction cascade) instead of one per
-        ``memtable_limit`` keys interleaved with the caller's scan."""
-        n = 0
+        ``memtable_limit`` keys interleaved with the caller's scan.
+
+        Durability-wise the batch is atomic: ONE ``"delm"`` WAL frame
+        covers all keys, so replay applies the whole sweep or none of it
+        (a torn frame was never acked)."""
+        keys = [self._check_key(k) for k in keys]
+        self._wal_append("delm", keys)
         for key in keys:
-            self.mem.delete(self._check_key(key))
-            n += 1
-        self.stats.deletes += n
+            self.mem.delete(key)
+        self.stats.deletes += len(keys)
         if len(self.mem) >= self.cfg.memtable_limit:
             self.flush()
 
@@ -287,7 +370,10 @@ class Store:
         if len(self.mem) == 0:
             return
         keys, vals, tombs = self.mem.sorted_entries()
-        self.levels[0].insert(0, self._make_run(keys, vals, tombs, 0))
+        run = self._make_run(keys, vals, tombs, 0)
+        run.checksums()                 # cache the build-time reference
+        self._fault("flush.after_run")
+        self.levels[0].insert(0, run)
         self.mem.clear()
         self.stats.flushes += 1
         self._dirty = True
@@ -307,7 +393,12 @@ class Store:
             lvl += 1
 
     def compact(self, level: int) -> None:
-        """Merge every run at ``level`` (plus the next level's run) down."""
+        """Merge every run at ``level`` (plus the next level's run) down.
+
+        Crash-atomic: the merged run — keys, values, filter state, and its
+        checksums — is fully built *before* the level lists are swapped,
+        so a crash mid-compaction (the ``compact.before_swap`` fault seam)
+        leaves every source run live and consistent."""
         if level >= len(self.levels) or not self.levels[level]:
             return
         if level + 1 >= len(self.levels):
@@ -317,8 +408,9 @@ class Store:
                          range(level + 2, len(self.levels)))
         keys, vals, tombs = merge_sorted_runs(sources,
                                               drop_tombstones=bottom)
-        self.levels[level] = []
         if len(keys) == 0:          # everything tombstoned away
+            self._fault("compact.before_swap")
+            self.levels[level] = []
             self.levels[level + 1] = []
             self.stats.compactions += 1
             self._dirty = True
@@ -357,9 +449,12 @@ class Store:
             promotions = 0
         else:
             promotions = 0
-        self.levels[level + 1] = [
-            Run(keys, vals, tombs, level + 1, target_layout, state, alt=alt,
-                promotions=promotions)]
+        new_run = Run(keys, vals, tombs, level + 1, target_layout, state,
+                      alt=alt, promotions=promotions)
+        new_run.checksums()             # checksummed before it goes live
+        self._fault("compact.before_swap")
+        self.levels[level] = []
+        self.levels[level + 1] = [new_run]
         self.stats.compactions += 1
         self._dirty = True
 
@@ -376,11 +471,17 @@ class Store:
             return
         self._runs = [r for lvl in self.levels for r in lvl]
         self._flat = self._probe = None
-        self._kstate = self._fence_dev = None
+        self._kstate = self._fence_dev = self._quar_dev = None
         self._kmins = np.asarray([r.kmin for r in self._runs], np.uint64)
         self._kmaxs = np.asarray([r.kmax for r in self._runs], np.uint64)
+        self._quar = np.asarray([r.quarantined for r in self._runs], bool)
         if self._runs and self.cfg.filter_backend == "bloomrf":
-            states = [r.state for r in self._runs]
+            # a quarantined run may have no decodable state at all — stack
+            # zero lanes in its place; the quarantine mask forces its
+            # verdict to "maybe" so the zeros are never trusted
+            states = [r.state if r.state is not None
+                      else jnp.zeros(r.layout.total_u32, jnp.uint32)
+                      for r in self._runs]
             self._flat = (states[0] if len(states) == 1
                           else jnp.concatenate(states))
             sizes = [r.layout.total_u32 for r in self._runs]
@@ -390,6 +491,14 @@ class Store:
                 tuple(r.layout for r in self._runs), bases)
         self._dirty = False
 
+    def _quar_device(self):
+        """Device quarantine mask, or None when no run is quarantined."""
+        if not self._quar.any():
+            return None
+        if self._quar_dev is None:
+            self._quar_dev = jnp.asarray(self._quar)
+        return self._quar_dev
+
     def _fence_mask(self, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
         """(B, R) bool: query interval overlaps the run's [kmin, kmax]."""
         return ((hi[:, None] >= self._kmins[None, :])
@@ -397,7 +506,10 @@ class Store:
 
     def _filter_mask(self, lo: np.ndarray, hi: np.ndarray,
                      point: bool) -> np.ndarray:
-        """(B, R) bool filter verdicts (True = run may hold a match)."""
+        """(B, R) bool filter verdicts (True = run may hold a match).
+
+        Quarantined rows answer "maybe" unconditionally — their filter
+        block failed its checksum, so its verdicts are untrusted."""
         if self.cfg.filter_backend == "none":
             return np.ones((len(lo), len(self._runs)), bool)
         if self.cfg.filter_backend == "bloomrf":
@@ -408,10 +520,14 @@ class Store:
                 v = self._probe.range_all(self._flat,
                                           jnp.asarray(lo, self.kdtype),
                                           jnp.asarray(hi, self.kdtype))
-            return np.asarray(v)
-        cols = [r.alt.point(lo) if point else r.alt.range(lo, hi)
-                for r in self._runs]
-        return np.stack(cols, axis=1)
+            out = np.asarray(v)
+        else:
+            cols = [r.alt.point(lo) if point else r.alt.range(lo, hi)
+                    for r in self._runs]
+            out = np.stack(cols, axis=1)
+        if self._quar.any():
+            out = out | self._quar[None, :]
+        return out
 
     def probe_runs(self, lo, hi, point: bool = False
                    ) -> Tuple[np.ndarray, np.ndarray]:
@@ -437,6 +553,9 @@ class Store:
         dmax = np.uint64((1 << self.cfg.d) - 1)
         filt = self._filter_mask(np.minimum(lo, dmax), np.minimum(hi, dmax),
                                  point)
+        if self._quar.any():
+            self.stats.degraded_probes += int(
+                (fence & self._quar[None, :]).sum())
         return fence, filt
 
     # ------------------------------------------------------------------
@@ -486,22 +605,36 @@ class Store:
             z = np.zeros((len(lo), 0), bool)
             return z, z
         if self._scan_kernel_mode() == "kernel":
-            dmax = np.uint64((1 << self.cfg.d) - 1)
-            layouts, stack, kmin_d, kmax_d, rpb = self._kernel_inputs()
-            f, t = store_scan_probe(
-                layouts, stack, kmin_d, kmax_d,
-                jnp.asarray(np.minimum(lo, dmax), jnp.uint32),
-                jnp.asarray(np.minimum(hi, dmax), jnp.uint32),
-                STORE_SCAN_TILE, rpb, jax.default_backend() != "tpu")
-            fence, touch = np.asarray(f), np.asarray(t)
-            # the uint32 clamp is exact for every in-domain `lo` (kmin,
-            # kmax <= dmax); intervals entirely above the domain must be
-            # fenced off on the host instead (kmax <= dmax < lo)
-            dead = lo > dmax
-            if dead.any():
-                fence, touch = fence.copy(), touch.copy()
-                fence[dead] = touch[dead] = False
-            return fence, touch
+            try:
+                self._fault("kernel.dispatch")
+                dmax = np.uint64((1 << self.cfg.d) - 1)
+                layouts, stack, kmin_d, kmax_d, rpb = self._kernel_inputs()
+                f, t = store_scan_probe(
+                    layouts, stack, kmin_d, kmax_d,
+                    jnp.asarray(np.minimum(lo, dmax), jnp.uint32),
+                    jnp.asarray(np.minimum(hi, dmax), jnp.uint32),
+                    STORE_SCAN_TILE, rpb, jax.default_backend() != "tpu",
+                    self._quar_device())
+                fence, touch = np.asarray(f), np.asarray(t)
+            except Exception:
+                # a dispatch-time pallas_call failure is survivable when
+                # the caller asked for "auto": retry the batch through the
+                # XLA probe plane (bit-identical verdicts) exactly once
+                if self.cfg.scan_backend != "auto":
+                    raise
+                self.stats.kernel_fallbacks += 1
+            else:
+                # the uint32 clamp is exact for every in-domain `lo` (kmin,
+                # kmax <= dmax); intervals entirely above the domain must be
+                # fenced off on the host instead (kmax <= dmax < lo)
+                dead = lo > dmax
+                if dead.any():
+                    fence, touch = fence.copy(), touch.copy()
+                    fence[dead] = touch[dead] = False
+                if self._quar.any():
+                    self.stats.degraded_probes += int(
+                        (fence & self._quar[None, :]).sum())
+                return fence, touch
         fence, filt = self.probe_runs(lo, hi, point=False)
         return fence, fence & filt
 
@@ -520,10 +653,17 @@ class Store:
             z = jnp.zeros((lo.shape[0], 0), bool)
             return z, z
         if self._scan_kernel_mode() == "kernel":
-            layouts, stack, kmin_d, kmax_d, rpb = self._kernel_inputs()
-            return store_scan_probe(layouts, stack, kmin_d, kmax_d, lo, hi,
-                                    STORE_SCAN_TILE, rpb,
-                                    jax.default_backend() != "tpu")
+            try:
+                self._fault("kernel.dispatch")
+                layouts, stack, kmin_d, kmax_d, rpb = self._kernel_inputs()
+                return store_scan_probe(layouts, stack, kmin_d, kmax_d,
+                                        lo, hi, STORE_SCAN_TILE, rpb,
+                                        jax.default_backend() != "tpu",
+                                        self._quar_device())
+            except Exception:
+                if self.cfg.scan_backend != "auto":
+                    raise
+                self.stats.kernel_fallbacks += 1
         if self._fence_dev is None:
             self._fence_dev = (jnp.asarray(self._kmins, self.kdtype),
                                jnp.asarray(self._kmaxs, self.kdtype))
@@ -531,7 +671,8 @@ class Store:
         lo = jnp.asarray(lo, self.kdtype)
         hi = jnp.asarray(hi, self.kdtype)
         if self.cfg.filter_backend == "bloomrf":
-            return self._probe.touch_all(self._flat, kmin_d, kmax_d, lo, hi)
+            return self._probe.touch_all(self._flat, kmin_d, kmax_d, lo, hi,
+                                         self._quar_device())
         if self.cfg.filter_backend == "none":
             fence, touch = _fence_touch_device(kmin_d, kmax_d, lo, hi)
             return fence, touch
@@ -640,25 +781,66 @@ class Store:
         return sum(r.layout.total_bits for r in self.live_runs()
                    if r.state is not None)
 
-    def snapshot(self) -> dict:
-        """Compressed snapshot of every frozen run (memtable excluded —
-        flush first for a full-state snapshot).
+    def quarantined_runs(self) -> List[Run]:
+        """Live runs whose filter block failed its checksum."""
+        return [r for r in self.live_runs() if r.quarantined]
 
-        v2 snapshots are byte-serializable (run ``vals`` hold ``None``
-        placeholders for tombstones instead of the in-process sentinel) and
-        carry the churn-policy config fields; ``restore`` accepts v1 too.
+    def snapshot(self, flush_first: bool = True) -> dict:
+        """Compressed snapshot of the store's full state.
+
+        The memtable is not serializable as such, so by default the store
+        flushes it into a level-0 run first — a snapshot that silently
+        dropped unflushed writes was this API's original sin.  Pass
+        ``flush_first=False`` to snapshot only the frozen runs; without a
+        WAL to re-cover the memtable that choice warns, because the
+        unflushed entries exist nowhere else.
+
+        v3 snapshots carry per-run component CRCs (``Run.pack``);
+        ``restore`` accepts v1/v2 too (unverified).
         """
-        return {"schema": "bloomrf-store/v2",
+        if flush_first:
+            self.flush()
+        elif len(self.mem) and self._wal is None:
+            warnings.warn(
+                f"snapshot(flush_first=False) with {len(self.mem)} unflushed "
+                f"memtable entries and no WAL: those writes are not in the "
+                f"snapshot and will not survive a restore",
+                RuntimeWarning, stacklevel=2)
+        return {"schema": "bloomrf-store/v3",
                 "config": dataclasses.asdict(self.cfg),
                 "levels": [[r.pack() for r in lvl] for lvl in self.levels]}
 
     @classmethod
     def restore(cls, snap: dict) -> "Store":
-        if snap.get("schema") not in ("bloomrf-store/v1", "bloomrf-store/v2"):
+        """Validated inverse of :meth:`snapshot` (in-memory only: a durable
+        config's WAL is NOT attached here — recover through
+        :meth:`Store.open` instead).
+
+        Malformed or corrupted input raises an actionable ``ValueError``
+        (never a segfault or a silent mis-restore); a run whose *filter
+        block* alone is corrupt restores quarantined (see ``Run.unpack``).
+        """
+        if not isinstance(snap, dict):
+            raise ValueError(f"store snapshot must be a dict, "
+                             f"got {type(snap).__name__}")
+        if snap.get("schema") not in ("bloomrf-store/v1", "bloomrf-store/v2",
+                                      "bloomrf-store/v3"):
             raise ValueError(f"not a store snapshot: {snap.get('schema')!r}")
-        store = cls(StoreConfig(**snap["config"]), _warn=False)
+        cfg_enc = snap.get("config")
+        if not isinstance(cfg_enc, dict):
+            raise ValueError("store snapshot: 'config' must be a dict")
+        try:
+            cfg = StoreConfig(**cfg_enc)
+        except (TypeError, ValueError) as e:
+            raise ValueError(f"store snapshot: bad config: {e}") from e
+        store = cls(cfg, _warn=False, _open_wal=False)
+        levels_enc = snap.get("levels")
+        if (not isinstance(levels_enc, list)
+                or not all(isinstance(lvl, list) for lvl in levels_enc)):
+            raise ValueError("store snapshot: 'levels' must be a list of "
+                             "run lists")
         store.levels = [[Run.unpack(enc) for enc in lvl]
-                        for lvl in snap["levels"]]
+                        for lvl in levels_enc]
         if not store.levels:
             store.levels = [[]]
         if store.cfg.filter_backend not in ("bloomrf", "none"):
@@ -669,3 +851,166 @@ class Store:
                     r.alt.build(r.keys)
         store._dirty = True
         return store
+
+    # ------------------------------------------------------------------
+    # durability: checkpoint / recovery / scrub (DESIGN.md §14)
+    # ------------------------------------------------------------------
+    def checkpoint(self) -> str:
+        """Make the current state durable; returns the snapshot path.
+
+        Protocol: flush the memtable, write ``snapshot-<seq>.bin``
+        atomically (temp file + rename), publish the self-checksummed
+        manifest naming it (also atomic), and only then reset the WAL and
+        GC older snapshots.  A crash at any point leaves a recoverable
+        directory: before the manifest rename the old checkpoint + full
+        WAL still recover everything; after it, WAL replay is idempotent
+        (last-write-wins), so replaying records the snapshot already
+        holds changes nothing."""
+        if self._wal is None:
+            raise ValueError("checkpoint() requires durability='wal' "
+                             "(open the store with a durable StoreConfig "
+                             "or Store.open)")
+        self.flush()
+        snap = self.snapshot(flush_first=False)
+        blob = pickle.dumps(snap, protocol=pickle.HIGHEST_PROTOCOL)
+        self._seq += 1
+        name = f"snapshot-{self._seq:08d}.bin"
+        path = os.path.join(self.cfg.wal_dir, name)
+        atomic_write_bytes(path, blob, fault=self.faults,
+                           fault_point="snapshot.before_rename")
+        write_manifest(self.cfg.wal_dir,
+                       {"snapshot": name, "crc32": crc32_bytes(blob),
+                        "seq": self._seq},
+                       fault=self.faults)
+        self._wal.reset()
+        self._gc_snapshots(keep=name)
+        return path
+
+    def _gc_snapshots(self, keep: str) -> None:
+        """Drop superseded/orphaned snapshot files (best-effort)."""
+        for fn in os.listdir(self.cfg.wal_dir):
+            if (fn.startswith("snapshot-") and fn.endswith(".bin")
+                    and fn != keep):
+                try:
+                    os.unlink(os.path.join(self.cfg.wal_dir, fn))
+                except OSError:
+                    pass
+
+    @classmethod
+    def open(cls, wal_dir: str, config: Optional[StoreConfig] = None, *,
+             faults: Optional[FaultPlan] = None) -> "Store":
+        """Open (or crash-recover) the durable store rooted at ``wal_dir``.
+
+        Recovery trusts nothing unverified: the manifest's own CRC, then
+        the snapshot file's CRC against the manifest's record, then every
+        run's component CRCs (``Run.unpack``).  After the snapshot loads,
+        the WAL is healed of any torn tail and its records replay into
+        the memtable — replay is idempotent, so records the snapshot
+        already holds are harmless.  ``config`` seeds a fresh store when
+        no checkpoint exists yet (its ``durability``/``wal_dir`` are
+        forced to this directory either way)."""
+        manifest = read_manifest(wal_dir)    # ValueError on corruption
+        if manifest is not None:
+            name = manifest.get("snapshot")
+            path = os.path.join(wal_dir, str(name))
+            try:
+                with open(path, "rb") as f:
+                    blob = f.read()
+            except OSError as e:
+                raise ValueError(f"manifest names snapshot {name!r} but it "
+                                 f"cannot be read: {e}") from e
+            if crc32_bytes(blob) != int(manifest.get("crc32", -1)):
+                raise ValueError(
+                    f"snapshot {name!r} fails its manifest CRC — torn write "
+                    f"or bit rot; restore from a previous checkpoint")
+            try:
+                snap = pickle.loads(blob)
+            except Exception as e:
+                raise ValueError(f"snapshot {name!r} passed its CRC but "
+                                 f"does not unpickle: {e}") from e
+            store = cls.restore(snap)
+            store.cfg = dataclasses.replace(store.cfg, durability="wal",
+                                            wal_dir=wal_dir)
+            store._seq = int(manifest.get("seq", 0))
+        else:
+            cfg = config if config is not None else StoreConfig(
+                durability="wal", wal_dir=wal_dir)
+            cfg = dataclasses.replace(cfg, durability="wal", wal_dir=wal_dir)
+            store = cls(cfg, _warn=False, _open_wal=False)
+        store.faults = faults
+        os.makedirs(wal_dir, exist_ok=True)
+        store._wal = Wal(os.path.join(wal_dir, WAL_FILENAME),
+                         sync=store.cfg.wal_sync).open_for_append()
+        store._replay_wal()
+        return store
+
+    def _replay_wal(self) -> None:
+        """Re-apply every intact WAL record through the memtable.
+
+        Records go straight into the memtable (not through ``put`` — they
+        must not re-append to the log they came from) with the normal
+        flush trigger, so replaying more than ``memtable_limit`` records
+        rebuilds runs exactly as the live path would have."""
+        n = 0
+        for op, key, value in self._wal.replay():
+            if op == "put":
+                self.mem.put(int(key), value)
+            elif op == "del":
+                self.mem.delete(int(key))
+            else:                       # "delm": one frame, many tombstones
+                for k in key:
+                    self.mem.delete(int(k))
+            n += 1
+            if len(self.mem) >= self.cfg.memtable_limit:
+                self.flush()
+        self.stats.wal_replayed = n
+
+    def close(self) -> None:
+        """Release the WAL file handle (the store stays readable)."""
+        if self._wal is not None:
+            self._wal.close()
+
+    def scrub(self, sample_keys: int = 64, seed: int = 0) -> dict:
+        """Full integrity pass over every live run.
+
+        Re-checks each run's component CRCs against its build-time
+        reference: a keys/fences/values mismatch raises (data corruption
+        has no graceful mode), a filter-block mismatch quarantines the
+        run in place.  Then re-asserts the no-false-negative contract on
+        up to ``sample_keys`` sampled live keys per run — each must probe
+        "maybe" on its own row (a quarantined row trivially does).
+        Returns a report dict."""
+        self._refresh()
+        rng = np.random.default_rng(seed)
+        newly = 0
+        for r in self._runs:
+            res = r.verify()
+            bad = [c for c in ("keys", "fences", "vals", "tombs")
+                   if not res.get(c, True)]
+            if bad:
+                raise ValueError(
+                    f"scrub: level-{r.level} run failed {bad} checksum(s) — "
+                    f"data corruption; restore from a checkpoint")
+            if not res.get("filter", True) and not r.quarantined:
+                r.quarantined = True
+                newly += 1
+                self._dirty = True
+        if newly:
+            self._refresh()
+        report = {"runs": len(self._runs),
+                  "quarantined": int(sum(r.quarantined for r in self._runs)),
+                  "newly_quarantined": newly,
+                  "fn_checked": 0}
+        for idx, r in enumerate(self._runs):
+            live = r.keys[~r.tombs]
+            if len(live) == 0:
+                continue
+            pick = (live if len(live) <= sample_keys
+                    else rng.choice(live, sample_keys, replace=False))
+            fence, filt = self.probe_runs(pick, pick, point=True)
+            report["fn_checked"] += len(pick)
+            if not (fence[:, idx] & filt[:, idx]).all():
+                raise ValueError(
+                    f"scrub: filter false negative on level-{r.level} run "
+                    f"{idx} — filter block corrupt beyond its checksum")
+        return report

@@ -2,9 +2,12 @@
 
 * :class:`Supervisor` — wraps a Trainer factory; on worker failure (any
   exception from the step loop) it recreates the trainer, which restores from
-  the latest checkpoint, and resumes.  Bounded restarts; every incident is
-  logged.  On a real cluster the factory re-acquires devices (possibly fewer
-  — elastic), here it is exercised with injected failures (tests).
+  the latest checkpoint, and resumes.  Bounded restarts with jittered
+  exponential backoff between attempts (doubling base delay, capped, plus a
+  seeded random jitter fraction so a fleet of supervisors never restarts in
+  lockstep); every incident is logged with the delay it waited.  On a real
+  cluster the factory re-acquires devices (possibly fewer — elastic), here it
+  is exercised with injected failures (tests, reusing ``store/faults.py``).
 * :func:`elastic_restore` — restore a checkpoint onto a *different* mesh:
   arrays are loaded host-side and re-placed with the new shardings (GSPMD
   handles the re-partitioning on first use).
@@ -14,9 +17,10 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, List
+from typing import Callable, List, Optional
 
 import jax
+import numpy as np
 
 from .checkpoint import restore_checkpoint
 
@@ -24,10 +28,38 @@ __all__ = ["Supervisor", "elastic_restore"]
 
 
 class Supervisor:
-    def __init__(self, trainer_factory: Callable, max_restarts: int = 3):
+    """Bounded-restart trainer supervision with jittered exponential backoff.
+
+    ``backoff_base`` seconds doubles per consecutive failure up to
+    ``backoff_cap``, then a uniform jitter of up to ``jitter`` of the delay
+    is added (seeded — deterministic in tests).  ``sleep`` is injectable so
+    tests assert the schedule without waiting it out.  The restart budget
+    counts *consecutive* failures within one :meth:`run` call; each call
+    starts fresh, so a supervisor that recovered successfully can be reused
+    with a full budget."""
+
+    def __init__(self, trainer_factory: Callable, max_restarts: int = 3,
+                 backoff_base: float = 0.5, backoff_cap: float = 30.0,
+                 jitter: float = 0.25, seed: int = 0,
+                 sleep: Optional[Callable[[float], None]] = None):
+        if backoff_base < 0 or backoff_cap < 0 or not (0 <= jitter <= 1):
+            raise ValueError("backoff_base/backoff_cap must be >= 0 and "
+                             "jitter in [0, 1]")
         self.factory = trainer_factory
         self.max_restarts = max_restarts
+        self.backoff_base = backoff_base
+        self.backoff_cap = backoff_cap
+        self.jitter = jitter
+        self._rng = np.random.default_rng(seed)
+        self._sleep = sleep if sleep is not None else time.sleep
         self.incidents: List[dict] = []
+
+    def _backoff(self, n_failures: int) -> float:
+        """Delay before restart ``n_failures`` (1-based): capped doubling
+        plus up to ``jitter`` fraction of uniform random spread."""
+        base = min(self.backoff_base * (2.0 ** (n_failures - 1)),
+                   self.backoff_cap)
+        return base * (1.0 + self.jitter * float(self._rng.random()))
 
     def run(self):
         restarts = 0
@@ -40,12 +72,15 @@ class Supervisor:
                         "stragglers": trainer.straggler_events}
             except Exception as e:  # noqa: BLE001 — any worker fault
                 restarts += 1
+                delay = self._backoff(restarts)
                 self.incidents.append({
                     "time": time.time(), "error": repr(e),
+                    "backoff_s": delay,
                     "resume_step": getattr(trainer, "start_step", 0)})
                 if restarts > self.max_restarts:
                     raise RuntimeError(
                         f"exceeded {self.max_restarts} restarts") from e
+                self._sleep(delay)
 
 
 def elastic_restore(ckpt_dir: str, step: int, like, shardings=None):

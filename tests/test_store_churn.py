@@ -169,7 +169,7 @@ def test_run_pack_has_no_inprocess_sentinel(rng):
     assert runs, "fixture produced no tombstoned runs"
     for run in runs:
         enc = run.pack()
-        assert enc["schema"] == "bloomrf-run/v2"
+        assert enc["schema"] == "bloomrf-run/v3"
         assert not any(isinstance(v, type(TOMBSTONE)) for v in enc["vals"])
         back = Run.unpack(enc)
         for v, t in zip(back.vals, back.tombs):
@@ -197,7 +197,7 @@ def test_run_unpack_accepts_v1_and_heals_identity(rng):
 def test_store_snapshot_pickle_roundtrip(rng):
     st, keys = _store_with_tombstones(rng)
     snap = st.snapshot()
-    assert snap["schema"] == "bloomrf-store/v2"
+    assert snap["schema"] == "bloomrf-store/v3"
     blob = pickle.dumps(snap)                         # REAL bytes
     st2 = Store.restore(pickle.loads(blob))
     qs = np.unique(keys)
