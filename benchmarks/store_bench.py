@@ -420,7 +420,72 @@ def run_recovery(seed: int = 0x57043) -> dict:
     }
 
 
-def run(section: dict | None = None):
+def run_obs(seed: int = 0x57043) -> tuple:
+    """``store/obs`` rows: the zero-overhead gate + live FPR vs §6 model.
+
+    ``(metrics, export_doc)``: one bloomrf/uniform store drives the
+    device scan phase (``run_device_one``) with the obs plane off and on
+    — min-of-3 each side, their ratio is the CI-gated overhead — then a
+    host facade batch populates the latency histograms and the
+    known-absent reservoir re-probe yields the live observed range FPR,
+    gated against the §6 analytic model for the same run stack.  The
+    export doc is the full ``bloomrf-metrics/v1`` snapshot
+    (``--metrics PATH`` writes it; CI gates it via check_gates)."""
+    from repro import obs
+    from repro.core.model import basic_range_fpr
+
+    rng = np.random.default_rng(seed ^ 0x0B5)
+    handle, _, data = run_one("bloomrf", "uniform", seed)
+    was_on = obs.enabled()
+    obs.disable()
+    us_off = min(run_device_one(handle, "uniform", data)[0]
+                 for _ in range(3))
+    obs.enable()
+    try:
+        handle.register_obs()
+        us_on = min(run_device_one(handle, "uniform", data)[0]
+                    for _ in range(3))
+        overhead = us_on / max(us_off, 1e-9)
+        # one host facade batch so the latency histograms have data
+        lo = _scan_starts(SCAN_BATCH, "uniform", data, rng)
+        handle.scan_many(lo, _scan_bounds(lo, "uniform"))
+        # fresh known-absent reservoir at the scan width, ground-truth mode
+        handle._fpr = None
+        handle._fpr_sampler(range_len=RSIZE)
+        fpr = handle.observed_fpr()
+        # §6 model for the same stack: a scan passes when ANY live run's
+        # filter fires, so the model FPR unions over the run pyramid
+        cfg = handle.store.cfg
+        miss = 1.0
+        for r in handle.store.live_runs():
+            miss *= 1.0 - basic_range_fpr(r.layout.d, len(r.keys),
+                                          r.layout.total_bits, RSIZE,
+                                          delta=cfg.delta)
+        model = 1.0 - miss
+        m = {
+            "overhead_ratio": overhead,
+            "us_per_op_obs_off": us_off,
+            "us_per_op_obs_on": us_on,
+            "observed_fpr": fpr.get("range_fpr", 0.0),
+            "point_fpr": fpr.get("point_fpr", 0.0),
+            "model_fpr": model,
+            "range_candidates": fpr.get("range_candidates", 0),
+            "runs_live": handle.n_runs,
+        }
+        doc = obs.export_snapshot(extra={
+            "obs/overhead_ratio": overhead,
+            "obs/fpr/observed": m["observed_fpr"],
+            "obs/fpr/point": m["point_fpr"],
+            "obs/fpr/model": model,
+            "obs/fpr/range_candidates": m["range_candidates"],
+        })
+    finally:
+        if not was_on:
+            obs.disable()
+    return m, doc
+
+
+def run(section: dict | None = None, metrics_path: str | None = None):
     """Bench rows (+ per-setting metrics into ``section`` when given)."""
     rows = []
     for dist in DISTS:
@@ -469,6 +534,22 @@ def run(section: dict | None = None):
         f"reopen_ms={r['reopen_ms']:.1f};"
         f"quarantined={r['quarantined_runs']};"
         f"degraded_mismatches={r['degraded_scan_mismatches']}"))
+    om, doc = run_obs()
+    if section is not None:
+        section["obs"] = om
+    if metrics_path:
+        import json
+        with open(metrics_path, "w") as f:
+            json.dump(doc, f, indent=1)
+    rows.append(emit(
+        "store/obs/overhead", om["us_per_op_obs_on"],
+        f"ratio={om['overhead_ratio']:.3f};"
+        f"off_us={om['us_per_op_obs_off']:.2f}"))
+    rows.append(emit(
+        "store/obs/observed_fpr", om["observed_fpr"],
+        f"model={om['model_fpr']:.4f};"
+        f"point={om['point_fpr']:.4f};"
+        f"candidates={om['range_candidates']}"))
     return rows
 
 
@@ -477,6 +558,10 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI sizes (benchmarks.run's smoke registry)")
     ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write the bloomrf-metrics/v1 observability "
+                         "snapshot (registry + observed FPR + overhead "
+                         "ratio) for check_gates --only obs_metrics")
     args = ap.parse_args()
     if args.smoke:
         from . import run as run_mod
@@ -484,7 +569,7 @@ def main() -> None:
             globals()[attr] = val
     section: dict = {}
     print("name,us_per_call,derived")
-    rows = run(section)
+    rows = run(section, metrics_path=args.metrics)
     if args.json:
         write_json(args.json, SCHEMA, rows, value_key="us_per_op",
                    smoke=args.smoke, store=section,

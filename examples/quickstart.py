@@ -2,7 +2,10 @@
 queries, compare the empirical FPR against the paper's model, and let the
 spec's tuning budget pick an advisor layout for large ranges — then do the
 same with float keys, which the façade encodes through the order-preserving
-φ codec (paper §8).
+φ codec (paper §8).  The observability plane (DESIGN.md §15) is switched on
+for the session, so the run ends with a one-screen metrics summary: probe
+counts, live observed FPR from the known-absent reservoir, and p50/p99
+facade latency.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,8 +15,10 @@ os.environ.setdefault("JAX_ENABLE_X64", "1")
 import numpy as np
 
 from repro import FilterSpec, open_filter
+from repro import obs
 from repro.core.model import basic_range_fpr
 
+obs.enable()
 rng = np.random.default_rng(42)
 
 # --- basic bloomRF: tuning-free, good to ranges ~2^14 --------------------
@@ -68,3 +73,23 @@ assert ff.point(temps[:100]).all()
 hot = ff.range(np.full(1, 35.0), np.full(1, 1000.0))
 print(f"\nfloat keys: any reading in [35C, 1000C]? -> {bool(hot[0])} "
       f"(truth: {bool((temps >= 35.0).any())})")
+
+# --- observability: what did this session actually do? --------------------
+# The registry accumulated everything above; observed_fpr() re-probes each
+# filter's known-absent reservoir — any positive is a certain false
+# positive, so the rate IS the live FPR (no truth set needed).
+live = f.observed_fpr()
+snap = obs.export_snapshot()["metrics"]
+print("\n--- metrics summary (repro.obs) ---")
+print(f"basic filter live FPR: point {live.get('point_fpr', 0.0):.4f}, "
+      f"range {live.get('range_fpr', 0.0):.4f} "
+      f"({live['range_candidates']} known-absent candidates re-probed)")
+for name in sorted(snap):
+    if name.startswith("obs/latency/"):
+        h = snap[name]
+        print(f"{name[len('obs/latency/'):]:>16}: n={h['count']:<6} "
+              f"p50={h['p50']:>9.0f}us p99={h['p99']:>9.0f}us")
+wl = snap.get("obs/workload/range_log2")
+if wl:
+    print(f"query range length: median ~2^{wl['p50']:.0f} "
+          f"({wl['count']} ranges observed)")

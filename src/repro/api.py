@@ -43,6 +43,8 @@ import numpy as np
 
 from .core import codecs as _cd
 from .core.layout import basic_layout, require_x64
+from .obs import metrics as _obs_metrics
+from .obs import trace as _obs_trace
 
 __all__ = ["FilterSpec", "open_filter", "chunked_probe",
            "SingleFilter", "BankFilter", "TenantFilter", "TypedStore"]
@@ -410,12 +412,40 @@ class _Handle:
     def __init__(self, spec: FilterSpec, codec: _Codec):
         self.spec = spec
         self.codec = codec
+        self._fpr = None        # lazy known-absent reservoir (obs/fpr.py)
 
     def describe(self) -> str:
         return self.spec.describe()
 
     def size_bits(self) -> int:
         raise NotImplementedError
+
+    # -- observability (DESIGN.md §15) -----------------------------------
+    def _fpr_sampler(self, **kw):
+        """This handle's known-absent reservoir, built on first use."""
+        if self._fpr is None:
+            from .obs.fpr import FprSampler
+
+            self._fpr = FprSampler(self.codec.d,
+                                   seed=self.spec.seed ^ 0xB10F, **kw)
+        return self._fpr
+
+    def _observe_ranges(self, clo, chi) -> None:
+        """Feed the workload sampler (range-length distribution) when the
+        obs plane is on; one boolean check otherwise."""
+        if _obs_metrics.enabled():
+            self._fpr_sampler().observe_ranges(clo, chi)
+
+    def _record_fpr(self, out: dict) -> dict:
+        """Publish an ``observed_fpr()`` result to the registry gauges."""
+        reg = _obs_metrics.registry()
+        if "range_fpr" in out:
+            reg.gauge("obs/fpr/observed").set(out["range_fpr"])
+        if "point_fpr" in out:
+            reg.gauge("obs/fpr/point").set(out["point_fpr"])
+        reg.gauge("obs/fpr/range_candidates").set(
+            out.get("range_candidates", 0))
+        return out
 
     # multi-attribute sugar shared by the filter handles -----------------
     def _require_multiattr(self):
@@ -506,17 +536,20 @@ class SingleFilter(_Handle):
     # -- mutation ---------------------------------------------------------
     def insert(self, keys) -> None:
         codes = self.codec.encode_insert(keys)
+        if _obs_metrics.enabled():
+            self._fpr_sampler().observe_insert(codes)
         import jax.numpy as jnp
 
         kd = self.filter.kdtype
-        for s in range(0, len(codes), self.spec.chunk):
-            cj = jnp.asarray(codes[s:s + self.spec.chunk], kd)
-            if self.gens is not None:
-                self.gens.insert(self._insert, cj)
-            else:
-                self._state = self._insert(self._state, cj)
-            if self.counts is not None:
-                self.counts.add(np.asarray(self._posf(cj)))
+        with _obs_trace.span("facade/insert", n=len(codes)):
+            for s in range(0, len(codes), self.spec.chunk):
+                cj = jnp.asarray(codes[s:s + self.spec.chunk], kd)
+                if self.gens is not None:
+                    self.gens.insert(self._insert, cj)
+                else:
+                    self._state = self._insert(self._state, cj)
+                if self.counts is not None:
+                    self.counts.add(np.asarray(self._posf(cj)))
 
     def delete(self, keys) -> None:
         """Remove previously inserted keys (``mutability='deletable'``).
@@ -570,13 +603,30 @@ class SingleFilter(_Handle):
     # -- probes -----------------------------------------------------------
     def point(self, qs) -> np.ndarray:
         codes = self.codec.encode_point(qs)
-        return chunked_probe(self._point, self.state, [codes],
-                             self.filter.kdtype, self.spec.chunk)
+        with _obs_trace.span("facade/point", n=len(codes)):
+            return chunked_probe(self._point, self.state, [codes],
+                                 self.filter.kdtype, self.spec.chunk)
 
     def range(self, lo, hi) -> np.ndarray:
         clo, chi = self.codec.encode_bounds(lo, hi)
-        return chunked_probe(self._range, self.state, [clo, chi],
-                             self.filter.kdtype, self.spec.chunk)
+        self._observe_ranges(clo, chi)
+        with _obs_trace.span("facade/range", n=len(clo)):
+            return chunked_probe(self._range, self.state, [clo, chi],
+                                 self.filter.kdtype, self.spec.chunk)
+
+    def observed_fpr(self) -> dict:
+        """Re-probe the known-absent reservoir → live observed FPR (§15).
+
+        Candidates are invalidated from the insert stream observed while
+        observability was enabled, so enable obs before the first insert
+        for an exact reservoir.  Publishes ``obs/fpr/*`` gauges."""
+        s = self._fpr_sampler()
+        kd = self.filter.kdtype
+        return self._record_fpr(s.sample(
+            point_probe=lambda ks: chunked_probe(
+                self._point, self.state, [ks], kd, self.spec.chunk),
+            range_probe=lambda lo, hi: chunked_probe(
+                self._range, self.state, [lo, hi], kd, self.spec.chunk)))
 
     def range_where_b(self, b_const, a_lo, a_hi) -> np.ndarray:
         """Multiattr: ``B == b_const AND A in [a_lo, a_hi]`` via <B,A> codes."""
@@ -606,22 +656,40 @@ class BankFilter(_Handle):
 
     def insert(self, keys) -> None:
         codes = self.codec.encode_insert(keys)
+        if _obs_metrics.enabled():
+            self._fpr_sampler().observe_insert(codes)
         import jax.numpy as jnp
 
-        for s in range(0, len(codes), self.spec.chunk):
-            self.state = self.bank.insert(
-                self.state, jnp.asarray(codes[s:s + self.spec.chunk],
-                                        self.bank.kdtype))
+        with _obs_trace.span("facade/insert", n=len(codes)):
+            for s in range(0, len(codes), self.spec.chunk):
+                self.state = self.bank.insert(
+                    self.state, jnp.asarray(codes[s:s + self.spec.chunk],
+                                            self.bank.kdtype))
 
     def point(self, qs) -> np.ndarray:
         codes = self.codec.encode_point(qs)
-        return chunked_probe(self.bank.point, self.state, [codes],
-                             self.bank.kdtype, self.spec.chunk)
+        with _obs_trace.span("facade/point", n=len(codes)):
+            return chunked_probe(self.bank.point, self.state, [codes],
+                                 self.bank.kdtype, self.spec.chunk)
 
     def range(self, lo, hi) -> np.ndarray:
         clo, chi = self.codec.encode_bounds(lo, hi)
-        return chunked_probe(self.bank.range, self.state, [clo, chi],
-                             self.bank.kdtype, self.spec.chunk)
+        self._observe_ranges(clo, chi)
+        with _obs_trace.span("facade/range", n=len(clo)):
+            return chunked_probe(self.bank.range, self.state, [clo, chi],
+                                 self.bank.kdtype, self.spec.chunk)
+
+    def observed_fpr(self) -> dict:
+        """Live observed FPR over the whole bank (see
+        :meth:`SingleFilter.observed_fpr`)."""
+        s = self._fpr_sampler()
+        kd = self.bank.kdtype
+        return self._record_fpr(s.sample(
+            point_probe=lambda ks: chunked_probe(
+                self.bank.point, self.state, [ks], kd, self.spec.chunk),
+            range_probe=lambda lo, hi: chunked_probe(
+                self.bank.range, self.state, [lo, hi], kd,
+                self.spec.chunk)))
 
     def range_where_b(self, b_const, a_lo, a_hi) -> np.ndarray:
         self._require_multiattr()
@@ -652,6 +720,7 @@ class TenantFilter(_Handle):
             spec.resolved_bits_per_key(), delta=delta, seed=spec.seed,
             _warn=False)
         self.gens = None        # ttl: generation lanes over (state, meta)
+        self._fpr_tenants: dict = {}    # per-tenant reservoirs (first <= 8)
         self._state = self.bank.init_state()
         self._meta = self.bank.init_meta()
         if spec.mutability == "ttl":
@@ -685,11 +754,30 @@ class TenantFilter(_Handle):
                 f"{n_codes} encoded keys")
         return t
 
+    #: tenants tracked with their own known-absent reservoir; per-tenant
+    #: FPR telemetry over every tenant would cost O(tenants) probes per
+    #: sample, so only the first few observed tenants are followed
+    _MAX_FPR_TENANTS = 8
+
+    def _tenant_sampler(self, tid: int):
+        s = self._fpr_tenants.get(tid)
+        if s is None and len(self._fpr_tenants) < self._MAX_FPR_TENANTS:
+            from .obs.fpr import FprSampler
+
+            s = self._fpr_tenants[tid] = FprSampler(
+                self.codec.d, seed=(self.spec.seed ^ 0xB10F) + tid)
+        return s
+
     def insert(self, tenants, keys) -> None:
         import jax.numpy as jnp
 
         codes = self.codec.encode_insert(keys)
         t = self._tiled_tenants(tenants, len(codes))
+        if _obs_metrics.enabled():
+            for tid in np.unique(t):
+                s = self._tenant_sampler(int(tid))
+                if s is not None:
+                    s.observe_insert(codes[t == tid])
         for s in range(0, len(codes), self.spec.chunk):
             cj = jnp.asarray(codes[s:s + self.spec.chunk], self.bank.bank.kdtype)
             tj = jnp.asarray(t[s:s + self.spec.chunk])
@@ -737,11 +825,12 @@ class TenantFilter(_Handle):
         codes = self.codec.encode_point(qs)
         t = self._tiled_tenants(tenants, len(codes))
         out = []
-        for s in range(0, len(codes), self.spec.chunk):
-            out.append(np.asarray(self.bank.point(
-                self.state, jnp.asarray(t[s:s + self.spec.chunk]),
-                jnp.asarray(codes[s:s + self.spec.chunk],
-                            self.bank.bank.kdtype))))
+        with _obs_trace.span("facade/point", n=len(codes)):
+            for s in range(0, len(codes), self.spec.chunk):
+                out.append(np.asarray(self.bank.point(
+                    self.state, jnp.asarray(t[s:s + self.spec.chunk]),
+                    jnp.asarray(codes[s:s + self.spec.chunk],
+                                self.bank.bank.kdtype))))
         return np.concatenate(out) if out else np.zeros(0, bool)
 
     def range(self, tenants, lo, hi, use_meta: bool = True) -> np.ndarray:
@@ -749,14 +838,51 @@ class TenantFilter(_Handle):
 
         clo, chi = self.codec.encode_bounds(lo, hi)
         t = self._tiled_tenants(tenants, len(clo))
+        self._observe_ranges(clo, chi)
+        record_skips = _obs_metrics.enabled() and use_meta
         out = []
-        for s in range(0, len(clo), self.spec.chunk):
-            out.append(np.asarray(self.bank.range(
-                self.state, jnp.asarray(t[s:s + self.spec.chunk]),
-                jnp.asarray(clo[s:s + self.spec.chunk], self.bank.bank.kdtype),
-                jnp.asarray(chi[s:s + self.spec.chunk], self.bank.bank.kdtype),
-                self.meta if use_meta else None)))
+        with _obs_trace.span("facade/range", n=len(clo)):
+            for s in range(0, len(clo), self.spec.chunk):
+                tj = jnp.asarray(t[s:s + self.spec.chunk])
+                lj = jnp.asarray(clo[s:s + self.spec.chunk],
+                                 self.bank.bank.kdtype)
+                hj = jnp.asarray(chi[s:s + self.spec.chunk],
+                                 self.bank.bank.kdtype)
+                out.append(np.asarray(self.bank.range(
+                    self.state, tj, lj, hj,
+                    self.meta if use_meta else None)))
+                if record_skips:
+                    # device-scalar meta-pruning telemetry; settles at
+                    # registry snapshot time, never here
+                    self.bank.record_meta_skips(self.meta, tj, lj, hj)
         return np.concatenate(out) if out else np.zeros(0, bool)
+
+    def observed_fpr(self) -> dict:
+        """Per-tenant live observed FPR for every tracked tenant (§15).
+
+        Tenants join the tracked set on their first ``insert`` while
+        observability is enabled (bounded by ``_MAX_FPR_TENANTS``).
+        Returns ``{tenant_id: sample_dict}`` and publishes
+        ``obs/fpr/tenant/<id>`` gauges."""
+        import jax.numpy as jnp
+
+        kd = self.bank.bank.kdtype
+        reg = _obs_metrics.registry()
+        out = {}
+        for tid, s in sorted(self._fpr_tenants.items()):
+            r = s.sample(
+                point_probe=lambda ks, tid=tid: np.asarray(self.bank.point(
+                    self.state, jnp.full(len(ks), tid, jnp.uint32),
+                    jnp.asarray(ks, kd))),
+                range_probe=lambda lo, hi, tid=tid: np.asarray(
+                    self.bank.range(
+                        self.state, jnp.full(len(lo), tid, jnp.uint32),
+                        jnp.asarray(lo, kd), jnp.asarray(hi, kd),
+                        self.meta)))
+            out[tid] = r
+            if "range_fpr" in r:
+                reg.gauge(f"obs/fpr/tenant/{tid}").set(r["range_fpr"])
+        return out
 
     def size_bits(self) -> int:
         return self.bank.size_bits()
@@ -805,12 +931,13 @@ class TypedStore(_Handle):
 
     def put(self, key, value) -> None:
         code = self._code1(key)
-        if self._buckets:
-            bucket = dict(self.store.get(code) or {})
-            bucket[key] = value
-            self.store.put(code, bucket)
-        else:
-            self.store.put(code, value)
+        with _obs_trace.span("facade/put"):
+            if self._buckets:
+                bucket = dict(self.store.get(code) or {})
+                bucket[key] = value
+                self.store.put(code, bucket)
+            else:
+                self.store.put(code, value)
 
     def delete(self, key) -> None:
         code = self._code1(key)
@@ -854,16 +981,18 @@ class TypedStore(_Handle):
     # -- read path --------------------------------------------------------
     def get(self, key):
         code = self._code1(key)
-        if self._buckets:
-            bucket = self.store.get(code)
-            return None if bucket is None else bucket.get(key)
-        return self.store.get(code)
+        with _obs_trace.span("facade/get"):
+            if self._buckets:
+                bucket = self.store.get(code)
+                return None if bucket is None else bucket.get(key)
+            return self.store.get(code)
 
     def get_many(self, keys) -> list:
         if self._buckets:
             return [self.get(k) for k in keys]
         codes = self.codec.encode_point(keys)
-        return self.store.get_many(codes)
+        with _obs_trace.span("facade/get", batch=len(codes)):
+            return self.store.get_many(codes)
 
     def scan(self, lo, hi) -> list:
         return self.scan_many([lo], [hi])[0]
@@ -872,16 +1001,20 @@ class TypedStore(_Handle):
         """Batched typed scans: one fused filter gather for the batch."""
         if self._buckets:
             clo, chi = self.codec.encode_bounds(los, his)
-            raw = self.store.scan_many(clo, chi)
+            self._observe_ranges(clo, chi)
+            with _obs_trace.span("facade/scan", batch=len(clo)):
+                raw = self.store.scan_many(clo, chi)
             # typed bounds ride along: buckets post-filter by string order
             return [self._decode_scan(rows, lo, hi)
                     for rows, lo, hi in zip(raw, los, his)]
         clo, chi = self.codec.encode_bounds(np.asarray(los), np.asarray(his))
+        self._observe_ranges(clo, chi)
         # iterate the encoded per-query bounds, NOT the caller's container —
         # multiattr column-form bounds are a (2, B) array whose first axis
         # is (a, b), so zipping the raw input would truncate the batch to 2
-        return [self._decode_scan(rows, None, None)
-                for rows in self.store.scan_many(clo, chi)]
+        with _obs_trace.span("facade/scan", batch=len(clo)):
+            raw = self.store.scan_many(clo, chi)
+        return [self._decode_scan(rows, None, None) for rows in raw]
 
     def _decode_scan(self, rows: list, lo, hi) -> list:
         if self._buckets:
@@ -925,6 +1058,43 @@ class TypedStore(_Handle):
 
     def size_bits(self) -> int:
         return self.store.filter_bits()
+
+    # -- observability (DESIGN.md §15) ------------------------------------
+    def register_obs(self, family: str = "store") -> str:
+        """Register the store's :class:`StoreStats` as a metric family."""
+        return self.store.register_obs(family)
+
+    def observed_fpr(self) -> dict:
+        """Live observed FPR from ground truth (§15).
+
+        Reservoir candidates still present in the store are eliminated at
+        sample time against the live key set — zero per-put overhead —
+        and the survivors re-probe through the run filters; any
+        ``fence & filter`` positive is a certain false positive.  Returns
+        aggregate point/range FPR plus per-run range rates, and publishes
+        the ``obs/fpr/*`` gauges."""
+        from .store.memtable import TOMBSTONE
+
+        store = self.store
+        s = self._fpr_sampler()
+        present = [np.asarray([k for k, v in store.mem.items()
+                               if v is not TOMBSTONE], np.uint64)]
+        present += [r.keys[~r.tombs] for r in store.live_runs()]
+        s.mark_present(np.concatenate(present))
+        klive = s.live_points()
+        rlo, rhi = s.live_ranges()
+        out = {"point_candidates": int(klive.size),
+               "range_candidates": int(rlo.size),
+               "workload_seen": s.workload_seen}
+        if klive.size:
+            fence, filt = store.probe_runs(klive, klive, point=True)
+            out["point_fpr"] = float((fence & filt).any(axis=1).mean())
+        if rlo.size:
+            fence, filt = store.probe_runs(rlo, rhi)
+            pos = fence & filt
+            out["range_fpr"] = float(pos.any(axis=1).mean())
+            out["range_fpr_per_run"] = [float(x) for x in pos.mean(axis=0)]
+        return self._record_fpr(out)
 
 
 # ---------------------------------------------------------------------------

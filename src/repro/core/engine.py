@@ -343,15 +343,25 @@ class ProbeEngine:
     # ------------------------------------------------------------------
     # fused entry points
     # ------------------------------------------------------------------
+    # jax.named_scope below is a trace-time annotation only: it adds NO
+    # jaxpr equations, so the fused-probe invariants (and the jaxpr text
+    # itself) are identical with observability on or off (tests/test_obs.py)
     def range_batched(self, state: jax.Array, lo, hi) -> jax.Array:
-        plan = self.plan_range(lo, hi)
-        g = self.gather(state, plan.lanes)
-        return self.combine_range(g, plan,
-                                  state=state if self.lay.has_exact else None)
+        with jax.named_scope("bloomrf/plan"):
+            plan = self.plan_range(lo, hi)
+        with jax.named_scope("bloomrf/gather"):
+            g = self.gather(state, plan.lanes)
+        with jax.named_scope("bloomrf/combine"):
+            return self.combine_range(
+                g, plan, state=state if self.lay.has_exact else None)
 
     def point_batched(self, state: jax.Array, ys) -> jax.Array:
-        plan = self.plan_point(ys)
-        return self.combine_point(self.gather(state, plan.lanes), plan)
+        with jax.named_scope("bloomrf/plan"):
+            plan = self.plan_point(ys)
+        with jax.named_scope("bloomrf/gather"):
+            g = self.gather(state, plan.lanes)
+        with jax.named_scope("bloomrf/combine"):
+            return self.combine_point(g, plan)
 
 
 # ---------------------------------------------------------------------------
@@ -430,45 +440,54 @@ class StackedProbe:
         lo = jnp.atleast_1d(jnp.asarray(lo))
         hi = jnp.atleast_1d(jnp.asarray(hi))
         B = lo.shape[0]
-        parts, plans = [], []
-        for e, r0, r1 in self.spans:
-            plan = e.plan_range(self._bounds(lo, B, r0, r1),
-                                self._bounds(hi, B, r0, r1))
-            # row bases fold in as python-int adds (no captured constant
-            # arrays — the Pallas stacked kernels trace this function)
-            shifted = jnp.stack(
-                [plan.lanes[:, i, :] + self.bases[r0 + i]
-                 for i in range(r1 - r0)], axis=1)
-            parts.append(shifted.reshape(B, -1))
-            plans.append(plan)
-        g = flat_state[jnp.concatenate(parts, axis=-1)]  # the one gather
-        out, off = [], 0
-        for (e, r0, r1), plan in zip(self.spans, plans):
-            G, A = r1 - r0, e.range_gather_width
-            gg = g[:, off:off + G * A].reshape(B, G, A)
-            off += G * A
-            out.append(e.combine_range(gg, plan))
-        return jnp.concatenate(out, axis=-1)              # (B, R)
+        # named_scope: trace-time annotation only, zero jaxpr equations —
+        # the one-gather invariant is asserted with these scopes in place
+        with jax.named_scope("bloomrf/plan"):
+            parts, plans = [], []
+            for e, r0, r1 in self.spans:
+                plan = e.plan_range(self._bounds(lo, B, r0, r1),
+                                    self._bounds(hi, B, r0, r1))
+                # row bases fold in as python-int adds (no captured constant
+                # arrays — the Pallas stacked kernels trace this function)
+                shifted = jnp.stack(
+                    [plan.lanes[:, i, :] + self.bases[r0 + i]
+                     for i in range(r1 - r0)], axis=1)
+                parts.append(shifted.reshape(B, -1))
+                plans.append(plan)
+        with jax.named_scope("bloomrf/gather"):
+            g = flat_state[jnp.concatenate(parts, axis=-1)]  # the one gather
+        with jax.named_scope("bloomrf/combine"):
+            out, off = [], 0
+            for (e, r0, r1), plan in zip(self.spans, plans):
+                G, A = r1 - r0, e.range_gather_width
+                gg = g[:, off:off + G * A].reshape(B, G, A)
+                off += G * A
+                out.append(e.combine_range(gg, plan))
+            return jnp.concatenate(out, axis=-1)          # (B, R)
 
     def _point_all(self, flat_state: jax.Array, ys) -> jax.Array:
         ys = jnp.atleast_1d(jnp.asarray(ys))
         B = ys.shape[0]
-        parts, plans = [], []
-        for e, r0, r1 in self.spans:
-            plan = e.plan_point(ys)                       # lanes/sh (B, P)
-            shifted = jnp.stack(
-                [plan.lanes + self.bases[r] for r in range(r0, r1)], axis=1)
-            parts.append(shifted.reshape(B, -1))
-            plans.append(plan)
-        g = flat_state[jnp.concatenate(parts, axis=-1)]  # the one gather
-        out, off = [], 0
-        for (e, r0, r1), plan in zip(self.spans, plans):
-            G, P = r1 - r0, plan.lanes.shape[-1]
-            gg = g[:, off:off + G * P].reshape(B, G, P)
-            off += G * P
-            bits = (gg >> plan.sh[:, None, :]) & jnp.uint32(1)
-            out.append(jnp.all(bits == 1, axis=-1))
-        return jnp.concatenate(out, axis=-1)              # (B, R)
+        with jax.named_scope("bloomrf/plan"):
+            parts, plans = [], []
+            for e, r0, r1 in self.spans:
+                plan = e.plan_point(ys)                   # lanes/sh (B, P)
+                shifted = jnp.stack(
+                    [plan.lanes + self.bases[r] for r in range(r0, r1)],
+                    axis=1)
+                parts.append(shifted.reshape(B, -1))
+                plans.append(plan)
+        with jax.named_scope("bloomrf/gather"):
+            g = flat_state[jnp.concatenate(parts, axis=-1)]  # the one gather
+        with jax.named_scope("bloomrf/combine"):
+            out, off = [], 0
+            for (e, r0, r1), plan in zip(self.spans, plans):
+                G, P = r1 - r0, plan.lanes.shape[-1]
+                gg = g[:, off:off + G * P].reshape(B, G, P)
+                off += G * P
+                bits = (gg >> plan.sh[:, None, :]) & jnp.uint32(1)
+                out.append(jnp.all(bits == 1, axis=-1))
+            return jnp.concatenate(out, axis=-1)          # (B, R)
 
     def _touch_all(self, flat_state: jax.Array, kmin, kmax, lo, hi,
                    quarantine=None):

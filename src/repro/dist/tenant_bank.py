@@ -275,6 +275,19 @@ class TenantFilterBank:
         cand, skip = jax.vmap(per_tenant)(t_ids, meta)
         return cand.sum(), skip.sum()
 
+    def record_meta_skips(self, meta, tenants, lo, hi) -> None:
+        """Accumulate :meth:`meta_skip_stats` into the obs registry.
+
+        Host helper: the jitted stats kernel is untouched; the device
+        scalars it returns are handed to the ``tenant_bank/*`` counters
+        without a host sync (they settle at ``snapshot()``)."""
+        from ..obs import metrics as _obs_metrics
+
+        cand, skip = self.meta_skip_stats(meta, tenants, lo, hi)
+        reg = _obs_metrics.registry()
+        reg.counter("tenant_bank/meta_candidates").add(cand)
+        reg.counter("tenant_bank/meta_skipped").add(skip)
+
     def size_bits(self) -> int:
         return self.n_tenants * self.n_shards * (
             self.bank.layout.total_bits + self.meta_layout.total_bits)

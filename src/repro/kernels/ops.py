@@ -22,10 +22,18 @@ import jax.numpy as jnp
 
 from ..core import BloomRF, FilterLayout
 from ..core.engine import stacked_probe
+from ..obs import metrics as _obs_metrics
+from ..obs import trace as _obs_trace
 from . import insert as _insert
 from . import probe as _probe
 from . import rangeprobe as _rangeprobe
 from .ref import check_kernel_layout
+
+
+def _tick(tier: str) -> None:
+    """Count one kernel dispatch on its tier (host int — never a tracer)."""
+    if _obs_metrics.enabled():
+        _obs_metrics.registry().counter(f"kernel/dispatch/{tier}").add(1)
 
 __all__ = ["FilterOps", "DEFAULT_VMEM_BUDGET_U32", "read_vmem_budget_u32"]
 
@@ -93,31 +101,39 @@ class FilterOps:
         return self.filter.init_state()
 
     def insert(self, state, keys):
-        if self.resident:
-            return _insert.insert_resident(self.layout, state, keys,
-                                           interpret=self.interpret)
-        return self.filter.insert(state, keys)  # XLA fallback
+        with _obs_trace.span("kernel/insert"):
+            if self.resident:
+                _tick("resident")
+                return _insert.insert_resident(self.layout, state, keys,
+                                               interpret=self.interpret)
+            _tick("xla")
+            return self.filter.insert(state, keys)  # XLA fallback
 
     # -- probes ----------------------------------------------------------
     def point(self, state, keys):
-        if self.resident:
-            return _probe.point_probe_resident(self.layout, state, keys,
-                                               interpret=self.interpret)
-        return _probe.point_probe_partitioned(self.layout, state, keys,
-                                              interpret=self.interpret)
+        with _obs_trace.span("kernel/point"):
+            if self.resident:
+                _tick("resident")
+                return _probe.point_probe_resident(
+                    self.layout, state, keys, interpret=self.interpret)
+            _tick("partitioned")
+            return _probe.point_probe_partitioned(
+                self.layout, state, keys, interpret=self.interpret)
 
     def range(self, state, lo, hi):
-        if self.layout.has_exact:  # bounded dynamic scan: XLA engine path
-            return self.filter.range(state,
-                                     jnp.asarray(lo, self.filter.kdtype),
-                                     jnp.asarray(hi, self.filter.kdtype))
-        if self.resident:
-            return _rangeprobe.range_probe_resident(self.layout, state, lo,
-                                                    hi,
-                                                    interpret=self.interpret)
-        return _rangeprobe.range_probe_partitioned(self.layout, state, lo,
-                                                   hi,
-                                                   interpret=self.interpret)
+        with _obs_trace.span("kernel/range"):
+            if self.layout.has_exact:  # bounded dynamic scan: XLA engine
+                _tick("xla")
+                return self.filter.range(state,
+                                         jnp.asarray(lo, self.filter.kdtype),
+                                         jnp.asarray(hi, self.filter.kdtype))
+            if self.resident:
+                _tick("resident")
+                return _rangeprobe.range_probe_resident(
+                    self.layout, state, lo, hi, interpret=self.interpret)
+            _tick("partitioned")
+            return _rangeprobe.range_probe_partitioned(
+                self.layout, state, lo, hi, interpret=self.interpret)
 
     # -- stacked-run probes (R same-layout rows, one gather per tile) ----
     def _stacked(self, n_rows: int):
@@ -134,8 +150,10 @@ class FilterOps:
                             out_axes=1)(stack)
         R = stack.shape[0]
         if R * self.layout.total_u32 <= self.vmem_budget_u32:
+            _tick("resident")
             return _rangeprobe.range_probe_stacked_resident(
                 self.layout, stack, lo, hi, interpret=self.interpret)
+        _tick("xla")
         return self._stacked(R).range_all(stack.reshape(-1), lo, hi)
 
     def point_stacked(self, stack, keys):
@@ -146,6 +164,8 @@ class FilterOps:
                             out_axes=1)(stack)
         R = stack.shape[0]
         if R * self.layout.total_u32 <= self.vmem_budget_u32:
+            _tick("resident")
             return _probe.point_probe_stacked_resident(
                 self.layout, stack, keys, interpret=self.interpret)
+        _tick("xla")
         return self._stacked(R).point_all(stack.reshape(-1), keys)

@@ -1,0 +1,45 @@
+"""Unified observability plane (DESIGN.md §15).
+
+Three layers, one registry:
+
+* :mod:`repro.obs.metrics` — counters / gauges / fixed-bucket histograms
+  with device-scalar accumulation (no host sync until ``snapshot()``),
+  plus registered *families* absorbing the pre-existing ad-hoc counters
+  (``StoreStats``, prefix-cache hits, WAL/recovery stats) without
+  breaking their field access.
+* :mod:`repro.obs.trace` — host-side spans around facade / store / WAL /
+  compaction ops: ``jax.profiler`` annotations when profiling,
+  ``bloomrf-trace/v1`` JSONL when a sink is set, p50/p99 latency
+  histograms always.
+* :mod:`repro.obs.fpr` — known-absent reservoirs whose periodic re-probe
+  yields *live* observed FPR and the query range-length distribution
+  (the Proteus-tuner workload sample).
+
+Everything is off by default (``BLOOMRF_OBS=1`` or :func:`enable`); with
+it off every instrumentation site is one boolean check and the jaxpr
+invariants (one gather / one ``pallas_call``) are bit-for-bit unchanged.
+``export_snapshot()`` emits the ``bloomrf-metrics/v1`` document the CI
+gates consume (``benchmarks/check_gates.py``).
+"""
+from .fpr import FprSampler
+from .metrics import (DEFAULT_LATENCY_BUCKETS_US, Counter, Gauge, Histogram,
+                      MetricsRegistry, disable, enable, enabled, registry)
+from .trace import TRACE_SCHEMA, set_trace_sink, span, trace_sink
+
+METRICS_SCHEMA = "bloomrf-metrics/v1"
+
+
+def export_snapshot(extra: dict | None = None) -> dict:
+    """Materialise the registry once → a ``bloomrf-metrics/v1`` dict."""
+    snap = registry().snapshot()
+    if extra:
+        snap.update(extra)
+    return {"schema": METRICS_SCHEMA, "metrics": snap}
+
+
+__all__ = [
+    "DEFAULT_LATENCY_BUCKETS_US", "Counter", "FprSampler", "Gauge",
+    "Histogram", "METRICS_SCHEMA", "MetricsRegistry", "TRACE_SCHEMA",
+    "disable", "enable", "enabled", "export_snapshot", "registry",
+    "set_trace_sink", "span", "trace_sink",
+]

@@ -1,0 +1,159 @@
+"""Live FPR telemetry: known-absent reservoirs re-probed on demand (§15).
+
+A :class:`FprSampler` holds a fixed reservoir of *candidate* absent
+point keys and ranges drawn uniformly over the filter's ``2^d`` code
+domain.  Candidates are invalidated as the workload proves them present,
+through either of two modes:
+
+* **insert-stream tracking** (filter handles): ``observe_insert`` buffers
+  every inserted code and lazily kills candidates the stream hits —
+  amortised, never on the probe path;
+* **ground truth** (the LSM store): ``mark_present`` *recomputes*
+  liveness from the full live-key set at sample time — zero per-put
+  overhead, exact by construction.
+
+``sample()`` re-probes the surviving candidates through caller-supplied
+probe closures; any positive is a certain false positive, so the hit
+rate IS the live observed FPR.  ``observe_ranges`` additionally feeds
+the query range-length distribution (``obs/workload/range_log2``
+histogram + an Algorithm-R reservoir of raw bounds) — the workload
+sample the Proteus-style tuner open item needs (ROADMAP, PAPERS.md).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import metrics as _metrics
+
+# log2(range length) upper edges, 0..64: the whole dyadic ladder
+LOG2_BUCKETS = tuple(float(b) for b in range(65))
+
+_SETTLE_AT = 1 << 16        # pending inserted codes before a lazy settle
+
+
+class FprSampler:
+    """Reservoir of known-absent keys/ranges over a ``2^d`` code domain."""
+
+    def __init__(self, d: int, n_keys: int = 512, n_ranges: int = 512,
+                 range_len: int = 256, seed: int = 0xB10F,
+                 reservoir_cap: int = 1024,
+                 workload_hist: str = "obs/workload/range_log2"):
+        if not 1 <= d <= 64:
+            raise ValueError("d must be in [1, 64]")
+        self.d = d
+        self._rng = np.random.default_rng(seed)
+        top = np.uint64((1 << d) - 1) if d < 64 else np.uint64(2**64 - 1)
+        self.keys = self._rng.integers(0, 1 << d, n_keys, dtype=np.uint64)
+        lo = self._rng.integers(0, 1 << d, n_ranges, dtype=np.uint64)
+        with np.errstate(over="ignore"):
+            hi = lo + np.uint64(max(range_len - 1, 0))
+        self.lo = lo
+        self.hi = np.where(hi < lo, top, np.minimum(hi, top))
+        self.key_live = np.ones(n_keys, dtype=bool)
+        self.range_live = np.ones(n_ranges, dtype=bool)
+        self._pending: list[np.ndarray] = []
+        self._pending_n = 0
+        # workload reservoir (Algorithm R over (lo, hi) pairs)
+        self._reservoir: list[tuple[int, int]] = []
+        self._cap = reservoir_cap
+        self._seen = 0
+        self._hist = workload_hist
+
+    # -- candidate invalidation ------------------------------------------
+
+    def observe_insert(self, codes) -> None:
+        """Buffer inserted codes; candidates they hit die lazily."""
+        codes = np.atleast_1d(np.asarray(codes, dtype=np.uint64))
+        if codes.size == 0:
+            return
+        self._pending.append(codes)
+        self._pending_n += codes.size
+        if self._pending_n >= _SETTLE_AT:
+            self._settle()
+
+    def _settle(self) -> None:
+        if not self._pending:
+            return
+        ins = np.unique(np.concatenate(self._pending))
+        self._pending, self._pending_n = [], 0
+        self.key_live &= ~np.isin(self.keys, ins)
+        idx = np.searchsorted(ins, self.lo)
+        at = np.minimum(idx, max(ins.size - 1, 0))
+        nonempty = (idx < ins.size) & (ins[at] <= self.hi)
+        self.range_live &= ~nonempty
+
+    def mark_present(self, present) -> None:
+        """Recompute liveness from the FULL present-key set (ground
+        truth); replaces — not merges with — insert-stream state."""
+        present = np.unique(np.asarray(present, dtype=np.uint64))
+        self._pending, self._pending_n = [], 0
+        if present.size == 0:
+            self.key_live[:] = True
+            self.range_live[:] = True
+            return
+        self.key_live = ~np.isin(self.keys, present)
+        idx = np.searchsorted(present, self.lo)
+        at = np.minimum(idx, present.size - 1)
+        self.range_live = ~((idx < present.size) & (present[at] <= self.hi))
+
+    # -- workload sampling -----------------------------------------------
+
+    def observe_ranges(self, lo, hi) -> None:
+        """Feed the range-length histogram + the bounds reservoir."""
+        lo = np.atleast_1d(np.asarray(lo, dtype=np.uint64))
+        hi = np.atleast_1d(np.asarray(hi, dtype=np.uint64))
+        if lo.size == 0:
+            return
+        lengths = (hi - lo).astype(np.float64) + 1.0
+        _metrics.registry().histogram(self._hist, LOG2_BUCKETS).observe_many(
+            np.log2(np.maximum(lengths, 1.0)))
+        self._seen += lo.size
+        free = self._cap - len(self._reservoir)
+        if free > 0:
+            take = min(free, lo.size)
+            self._reservoir.extend(
+                zip(lo[:take].tolist(), hi[:take].tolist()))
+            lo, hi = lo[take:], hi[take:]
+        if lo.size:
+            slots = self._rng.integers(0, self._seen, lo.size)
+            for j, a, b in zip(slots, lo.tolist(), hi.tolist()):
+                if j < self._cap:
+                    self._reservoir[j] = (a, b)
+
+    def workload_sample(self) -> list[tuple[int, int]]:
+        """The reservoir of raw (lo, hi) query bounds (tuner input)."""
+        return list(self._reservoir)
+
+    @property
+    def workload_seen(self) -> int:
+        return self._seen
+
+    # -- re-probe ---------------------------------------------------------
+
+    def live_points(self) -> np.ndarray:
+        self._settle()
+        return self.keys[self.key_live]
+
+    def live_ranges(self) -> tuple[np.ndarray, np.ndarray]:
+        self._settle()
+        return self.lo[self.range_live], self.hi[self.range_live]
+
+    def sample(self, point_probe=None, range_probe=None) -> dict:
+        """Re-probe surviving candidates → live observed FPR.
+
+        ``point_probe(keys)`` / ``range_probe(lo, hi)`` return a boolean
+        verdict per query; every positive is a certain false positive.
+        """
+        out = {
+            "point_candidates": int(self.live_points().size),
+            "range_candidates": int(self.live_ranges()[0].size),
+            "workload_seen": self.workload_seen,
+        }
+        if point_probe is not None and out["point_candidates"]:
+            pos = np.asarray(point_probe(self.live_points()))
+            out["point_fpr"] = float(pos.astype(bool).ravel().mean())
+        if range_probe is not None and out["range_candidates"]:
+            lo, hi = self.live_ranges()
+            pos = np.asarray(range_probe(lo, hi))
+            out["range_fpr"] = float(pos.astype(bool).ravel().mean())
+        return out

@@ -1,0 +1,104 @@
+"""Span tracing: host-side timing contexts around production paths (§15).
+
+``span(name)`` returns a context manager.  With observability disabled
+it is a shared do-nothing singleton — one boolean check, zero
+allocation.  Enabled, a span:
+
+* wraps the body in ``jax.profiler.TraceAnnotation`` so the op shows up
+  in a device trace when a profiler session is active (and costs ~nothing
+  when one is not),
+* feeds the wall-clock duration into the per-op-class latency histogram
+  ``obs/latency/{name}`` in the global registry (p50/p99 come from
+  there), and
+* appends a structured ``bloomrf-trace/v1`` JSONL record when a trace
+  sink has been set via :func:`set_trace_sink`.
+
+Spans are HOST-side only.  Inside jitted functions the engine and the
+store-scan kernel use ``jax.named_scope`` instead — a trace-time
+annotation that adds no jaxpr equations, so the one-fused-gather and
+one-``pallas_call`` invariants hold bit-for-bit with observability on
+or off (pinned by ``tests/test_obs.py``).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from . import metrics as _metrics
+
+TRACE_SCHEMA = "bloomrf-trace/v1"
+
+_sink_path: str | None = None
+_sink_file = None
+_TraceAnnotation = None     # resolved on first enabled span (lazy jax)
+
+
+def set_trace_sink(path: str | None) -> None:
+    """Append JSONL span records to ``path`` (``None`` closes the sink)."""
+    global _sink_path, _sink_file
+    if _sink_file is not None:
+        _sink_file.close()
+    _sink_path, _sink_file = None, None
+    if path:
+        _sink_path = str(path)
+        _sink_file = open(path, "a", encoding="utf-8")
+
+
+def trace_sink() -> str | None:
+    return _sink_path
+
+
+class _NullSpan:
+    """Disabled-mode span: a do-nothing context-manager singleton."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+NULL_SPAN = _NullSpan()
+
+
+class Span:
+    __slots__ = ("name", "attrs", "_t0", "_prof")
+
+    def __init__(self, name: str, attrs: dict):
+        self.name = name
+        self.attrs = attrs
+        self._t0 = 0.0
+        self._prof = None
+
+    def __enter__(self):
+        global _TraceAnnotation
+        if _TraceAnnotation is None:
+            from jax.profiler import TraceAnnotation
+            _TraceAnnotation = TraceAnnotation
+        self._prof = _TraceAnnotation(f"bloomrf/{self.name}")
+        self._prof.__enter__()
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        dur_us = (time.perf_counter() - self._t0) * 1e6
+        self._prof.__exit__(*exc)
+        _metrics.registry().histogram(
+            f"obs/latency/{self.name}").observe(dur_us)
+        if _sink_file is not None:
+            rec = {"schema": TRACE_SCHEMA, "span": self.name,
+                   "ts": time.time(), "dur_us": dur_us}
+            if self.attrs:
+                rec["attrs"] = self.attrs
+            _sink_file.write(json.dumps(rec) + "\n")
+            _sink_file.flush()
+        return False
+
+
+def span(name: str, **attrs):
+    """Span context for op-class ``name``; a no-op singleton when off."""
+    if not _metrics.enabled():
+        return NULL_SPAN
+    return Span(name, attrs)

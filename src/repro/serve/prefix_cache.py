@@ -39,6 +39,7 @@ read amplification bounded).
 """
 from __future__ import annotations
 
+import weakref
 from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
@@ -46,6 +47,7 @@ import numpy as np
 
 from ..core import codecs
 from ..dist.tenant_bank import TenantFilterBank
+from ..obs import metrics as _obs_metrics
 from ..store import Store
 
 __all__ = ["PrefixCacheIndex", "pack_key"]
@@ -100,6 +102,25 @@ class PrefixCacheIndex:
         self.store: Optional[Store] = None
         if backing_store is not None:
             self.attach_store(backing_store)
+        if _obs_metrics.enabled():
+            self.register_obs()
+
+    def register_obs(self, family: str = "prefix_cache") -> str:
+        """Publish the admission stats (+ live fp_rate) as a metric family.
+
+        Registered through a weakref: a collected index's family reports
+        ``None`` and is pruned at the next registry snapshot."""
+        ref = weakref.ref(self)
+
+        def _family():
+            idx = ref()
+            if idx is None:
+                return None
+            out = dict(idx.stats)
+            out["fp_rate"] = idx.false_positive_rate()
+            return out
+
+        return _obs_metrics.registry().register_family(family, _family)
 
     def attach_store(self, store: Store, backfill: bool = True) -> None:
         """Use an LSM run-store as the cold tier behind the segments.

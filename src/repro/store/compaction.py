@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import FilterLayout, promote_state, promotion_factors
+from ..obs import trace as _obs_trace
 from .run import Run
 
 __all__ = ["merge_sorted_runs", "merge_filter_state"]
@@ -49,6 +50,11 @@ def merge_sorted_runs(runs: List[Run], drop_tombstones: bool = False
     entirely (bottom-level merges only)."""
     if not runs:
         raise ValueError("nothing to merge")
+    with _obs_trace.span("compaction/merge_runs", runs=len(runs)):
+        return _merge_sorted_runs(runs, drop_tombstones)
+
+
+def _merge_sorted_runs(runs, drop_tombstones):
     all_keys = np.concatenate([r.keys for r in runs])
     prec = np.concatenate([np.full(len(r.keys), i, np.int64)
                            for i, r in enumerate(runs)])
@@ -130,6 +136,15 @@ def merge_filter_state(runs: List[Run], target_layout: FilterLayout,
       rebuild path to wash dead keys' bits out of the filter even when an
       OR or promote merge was available.
     """
+    with _obs_trace.span("compaction/merge_filters", runs=len(runs)):
+        return _merge_filter_state(runs, target_layout, keys, build,
+                                   dead_frac, purge_dead_frac, allow_promote,
+                                   promote_density_slack)
+
+
+def _merge_filter_state(runs, target_layout, keys, build, dead_frac,
+                        purge_dead_frac, allow_promote,
+                        promote_density_slack):
     purge = purge_dead_frac is not None and dead_frac > purge_dead_frac
     if purge:
         return build(target_layout, keys), "purge"

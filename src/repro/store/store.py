@@ -52,7 +52,8 @@ import dataclasses
 import os
 import pickle
 import warnings
-from typing import List, Optional, Tuple
+import weakref
+from typing import ClassVar, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,6 +64,8 @@ from ..core.engine import _filter_for_layout, stacked_probe
 from ..kernels import FilterOps, read_vmem_budget_u32
 from ..kernels.store_scan import DEFAULT_TILE as STORE_SCAN_TILE
 from ..kernels.store_scan import build_run_stack, store_scan_probe
+from ..obs import metrics as _obs_metrics
+from ..obs import trace as _obs_trace
 from .compaction import merge_filter_state, merge_sorted_runs
 from .faults import FaultPlan
 from .integrity import (MANIFEST_FILENAME, atomic_write_bytes, crc32_bytes,
@@ -174,8 +177,17 @@ class StoreConfig:
 
 @dataclasses.dataclass
 class StoreStats:
-    """Counters for what the filter blocks saved on the read path."""
+    """Counters for what the filter blocks saved on the read path.
 
+    Field access stays plain attribute reads/writes; :meth:`snapshot`
+    returns the same counters (plus derived rates) as a flat dict so the
+    obs registry and the CI gates can address them by dotted path, and
+    :meth:`reset` zeroes every field in place.  The :data:`DURABLE`
+    subset travels inside ``Store.snapshot()`` and survives
+    restore/checkpoint/recovery round-trips (DESIGN.md §15)."""
+
+    # write-path history: durable — it describes the data the snapshot
+    # carries, so it rides along (see DURABLE below)
     puts: int = 0
     deletes: int = 0
     gets: int = 0
@@ -209,6 +221,16 @@ class StoreStats:
     kernel_fallbacks: int = 0       # scan batches retried through the XLA
                                     # plane after a pallas_call dispatch error
 
+    # Counters that survive Store.snapshot()/restore(): the write-path
+    # history that produced the snapshotted runs, plus kernel_fallbacks
+    # (a degradation odometer that must not silently reset with the
+    # process).  Read-path counters, wal_appends/wal_replayed and
+    # degraded_probes describe THIS process's traffic and stay local.
+    DURABLE: ClassVar[Tuple[str, ...]] = (
+        "puts", "deletes", "flushes", "compactions", "or_merges",
+        "rebuild_merges", "promote_merges", "purge_rebuilds",
+        "kernel_fallbacks")
+
     @property
     def runs_probed_per_scan(self) -> float:
         return self.scan_runs_touched / max(self.scans, 1)
@@ -227,6 +249,18 @@ class StoreStats:
         d["scan_fp_read_rate"] = self.scan_fp_read_rate
         d["get_fp_read_rate"] = self.get_fp_read_rate
         return d
+
+    def snapshot(self) -> dict:
+        """Flat counters + derived rates (the registered-family view)."""
+        return self.as_dict()
+
+    def reset(self) -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, 0)
+
+    def durable_snapshot(self) -> dict:
+        """The DURABLE subset, as carried inside ``Store.snapshot()``."""
+        return {name: int(getattr(self, name)) for name in self.DURABLE}
 
 
 class Store:
@@ -258,6 +292,8 @@ class Store:
         self._dirty = True
         self._wal: Optional[Wal] = None
         self._seq = 0                         # checkpoint sequence number
+        if _obs_metrics.enabled():            # late joiners: register_obs()
+            self.register_obs()
         if self.cfg.durability == "wal" and _open_wal:
             os.makedirs(self.cfg.wal_dir, exist_ok=True)
             wal_path = os.path.join(self.cfg.wal_dir, WAL_FILENAME)
@@ -276,6 +312,19 @@ class Store:
         """Pass through a named fault-injection seam (no-op without a plan)."""
         if self.faults is not None:
             self.faults.hit(point)
+
+    def register_obs(self, family: str = "store") -> str:
+        """Join the obs registry as a metric family (DESIGN.md §15).
+
+        The registry holds only a weak reference — a collected store
+        drops out of the next ``snapshot()``.  Returns the assigned
+        family name (auto-suffixed when taken).  Called automatically at
+        construction when observability is already enabled."""
+        sref = weakref.ref(self)
+        return _obs_metrics.registry().register_family(
+            family,
+            lambda: (lambda s: None if s is None
+                     else s.stats.snapshot())(sref()))
 
     # ------------------------------------------------------------------
     # capacity classes and filter construction
@@ -369,14 +418,15 @@ class Store:
         """Freeze the memtable into a new level-0 run."""
         if len(self.mem) == 0:
             return
-        keys, vals, tombs = self.mem.sorted_entries()
-        run = self._make_run(keys, vals, tombs, 0)
-        run.checksums()                 # cache the build-time reference
-        self._fault("flush.after_run")
-        self.levels[0].insert(0, run)
-        self.mem.clear()
-        self.stats.flushes += 1
-        self._dirty = True
+        with _obs_trace.span("store/flush", entries=len(self.mem)):
+            keys, vals, tombs = self.mem.sorted_entries()
+            run = self._make_run(keys, vals, tombs, 0)
+            run.checksums()             # cache the build-time reference
+            self._fault("flush.after_run")
+            self.levels[0].insert(0, run)
+            self.mem.clear()
+            self.stats.flushes += 1
+            self._dirty = True
         self._maybe_compact()
 
     # ------------------------------------------------------------------
@@ -401,6 +451,10 @@ class Store:
         leaves every source run live and consistent."""
         if level >= len(self.levels) or not self.levels[level]:
             return
+        with _obs_trace.span("store/compact", level=level):
+            self._compact_inner(level)
+
+    def _compact_inner(self, level: int) -> None:
         if level + 1 >= len(self.levels):
             self.levels.append([])
         sources = self.levels[level] + self.levels[level + 1]
@@ -648,6 +702,11 @@ class Store:
         ``StackedProbe.touch_all`` (still one fused gather) in ``xla``
         mode; fence-only verdicts for ``filter_backend="none"``."""
         self._refresh()
+        if _obs_metrics.enabled():
+            # host-side batch odometer only: the dispatch stays async and
+            # nothing syncs — the ≤1.05x obs-overhead gate times this path
+            _obs_metrics.registry().counter(
+                "store/scan_probe_batches").add(1)
         lo = jnp.atleast_1d(lo)
         if not self._runs:
             z = jnp.zeros((lo.shape[0], 0), bool)
@@ -690,6 +749,10 @@ class Store:
     def get_many(self, keys) -> list:
         """Batched point lookups: one fused filter gather for the batch."""
         keys = np.atleast_1d(np.asarray(keys, np.uint64))
+        with _obs_trace.span("store/get", batch=len(keys)):
+            return self._get_many_inner(keys)
+
+    def _get_many_inner(self, keys: np.ndarray) -> list:
         st = self.stats
         st.gets += len(keys)
         fence, filt = self.probe_runs(keys, keys, point=True)
@@ -732,9 +795,10 @@ class Store:
         fused XLA gather, per ``StoreConfig.scan_backend``."""
         los = np.atleast_1d(np.asarray(los, np.uint64))
         his = np.atleast_1d(np.asarray(his, np.uint64))
-        fence, touch = self._touch_masks(los, his)
-        return [self._scan_one(int(lo), int(hi), fence[b], touch[b])
-                for b, (lo, hi) in enumerate(zip(los, his))]
+        with _obs_trace.span("store/scan", batch=len(los)):
+            fence, touch = self._touch_masks(los, his)
+            return [self._scan_one(int(lo), int(hi), fence[b], touch[b])
+                    for b, (lo, hi) in enumerate(zip(los, his))]
 
     def _scan_one(self, lo: int, hi: int, fence: np.ndarray,
                   touch: np.ndarray) -> list:
@@ -808,6 +872,7 @@ class Store:
                 RuntimeWarning, stacklevel=2)
         return {"schema": "bloomrf-store/v3",
                 "config": dataclasses.asdict(self.cfg),
+                "stats": self.stats.durable_snapshot(),
                 "levels": [[r.pack() for r in lvl] for lvl in self.levels]}
 
     @classmethod
@@ -849,6 +914,17 @@ class Store:
                     r.alt = _baseline_factory(store.cfg.filter_backend)(
                         store.cfg.bits_per_key)
                     r.alt.build(r.keys)
+        stats_enc = snap.get("stats")    # optional: absent in v1/v2 or
+        if stats_enc is not None:        # pre-§15 v3 snapshots
+            if (not isinstance(stats_enc, dict)
+                    or not set(stats_enc) <= set(StoreStats.DURABLE)
+                    or not all(isinstance(v, int) and not isinstance(v, bool)
+                               and v >= 0 for v in stats_enc.values())):
+                raise ValueError(
+                    "store snapshot: 'stats' must map durable counter "
+                    "names to non-negative ints")
+            for k, v in stats_enc.items():
+                setattr(store.stats, k, v)
         store._dirty = True
         return store
 
@@ -870,21 +946,22 @@ class Store:
             raise ValueError("checkpoint() requires durability='wal' "
                              "(open the store with a durable StoreConfig "
                              "or Store.open)")
-        self.flush()
-        snap = self.snapshot(flush_first=False)
-        blob = pickle.dumps(snap, protocol=pickle.HIGHEST_PROTOCOL)
-        self._seq += 1
-        name = f"snapshot-{self._seq:08d}.bin"
-        path = os.path.join(self.cfg.wal_dir, name)
-        atomic_write_bytes(path, blob, fault=self.faults,
-                           fault_point="snapshot.before_rename")
-        write_manifest(self.cfg.wal_dir,
-                       {"snapshot": name, "crc32": crc32_bytes(blob),
-                        "seq": self._seq},
-                       fault=self.faults)
-        self._wal.reset()
-        self._gc_snapshots(keep=name)
-        return path
+        with _obs_trace.span("store/checkpoint"):
+            self.flush()
+            snap = self.snapshot(flush_first=False)
+            blob = pickle.dumps(snap, protocol=pickle.HIGHEST_PROTOCOL)
+            self._seq += 1
+            name = f"snapshot-{self._seq:08d}.bin"
+            path = os.path.join(self.cfg.wal_dir, name)
+            atomic_write_bytes(path, blob, fault=self.faults,
+                               fault_point="snapshot.before_rename")
+            write_manifest(self.cfg.wal_dir,
+                           {"snapshot": name, "crc32": crc32_bytes(blob),
+                            "seq": self._seq},
+                           fault=self.faults)
+            self._wal.reset()
+            self._gc_snapshots(keep=name)
+            return path
 
     def _gc_snapshots(self, keep: str) -> None:
         """Drop superseded/orphaned snapshot files (best-effort)."""
@@ -950,19 +1027,28 @@ class Store:
         Records go straight into the memtable (not through ``put`` — they
         must not re-append to the log they came from) with the normal
         flush trigger, so replaying more than ``memtable_limit`` records
-        rebuilds runs exactly as the live path would have."""
+        rebuilds runs exactly as the live path would have.
+
+        Replayed records re-enter the durable ``puts``/``deletes``
+        counters: the restored snapshot's stats stop at checkpoint time,
+        so the post-checkpoint tail must be re-counted for the durable
+        totals to equal every acked write (DESIGN.md §15)."""
         n = 0
-        for op, key, value in self._wal.replay():
-            if op == "put":
-                self.mem.put(int(key), value)
-            elif op == "del":
-                self.mem.delete(int(key))
-            else:                       # "delm": one frame, many tombstones
-                for k in key:
-                    self.mem.delete(int(k))
-            n += 1
-            if len(self.mem) >= self.cfg.memtable_limit:
-                self.flush()
+        with _obs_trace.span("wal/replay"):
+            for op, key, value in self._wal.replay():
+                if op == "put":
+                    self.mem.put(int(key), value)
+                    self.stats.puts += 1
+                elif op == "del":
+                    self.mem.delete(int(key))
+                    self.stats.deletes += 1
+                else:                   # "delm": one frame, many tombstones
+                    for k in key:
+                        self.mem.delete(int(k))
+                    self.stats.deletes += len(key)
+                n += 1
+                if len(self.mem) >= self.cfg.memtable_limit:
+                    self.flush()
         self.stats.wal_replayed = n
 
     def close(self) -> None:
@@ -980,6 +1066,10 @@ class Store:
         up to ``sample_keys`` sampled live keys per run — each must probe
         "maybe" on its own row (a quarantined row trivially does).
         Returns a report dict."""
+        with _obs_trace.span("store/scrub"):
+            return self._scrub_inner(sample_keys, seed)
+
+    def _scrub_inner(self, sample_keys: int, seed: int) -> dict:
         self._refresh()
         rng = np.random.default_rng(seed)
         newly = 0

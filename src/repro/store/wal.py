@@ -38,6 +38,9 @@ import struct
 import zlib
 from typing import Iterator, List, Optional, Tuple
 
+from ..obs import metrics as _obs_metrics
+from ..obs import trace as _obs_trace
+
 __all__ = ["Wal", "WalRecord", "WAL_FILENAME"]
 
 WAL_FILENAME = "wal.log"
@@ -79,13 +82,16 @@ class Wal:
             raise ValueError(f"unknown WAL op {op!r}")
         if self._f is None:
             self.open_for_append()
-        payload = pickle.dumps((op, key, value),
-                               protocol=pickle.HIGHEST_PROTOCOL)
-        self._f.write(_HEADER.pack(len(payload), zlib.crc32(payload)))
-        self._f.write(payload)
-        self._f.flush()
-        if self.sync == "always":
-            os.fsync(self._f.fileno())
+        with _obs_trace.span("wal/append"):
+            payload = pickle.dumps((op, key, value),
+                                   protocol=pickle.HIGHEST_PROTOCOL)
+            self._f.write(_HEADER.pack(len(payload), zlib.crc32(payload)))
+            self._f.write(payload)
+            self._f.flush()
+            if self.sync == "always":
+                os.fsync(self._f.fileno())
+        if _obs_metrics.enabled():
+            _obs_metrics.registry().counter("wal/appends").add(1)
 
     def reset(self) -> None:
         """Drop every record (post-checkpoint): the snapshot now owns them."""
