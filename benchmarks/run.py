@@ -30,7 +30,9 @@ SMOKE = {
     "kernels": {"N": 100_000, "Q": 50_000},
     "store": {"N": 20_000, "OPS": 2_000, "MEMTABLE": 800, "SCAN_BATCH": 256,
               "BACKENDS": ("bloomrf", "none", "prefix_bloom"),
-              "CHURN_OPS": 8_000, "RECOVERY_OPS": 6_000},
+              "CHURN_OPS": 8_000, "RECOVERY_OPS": 6_000,
+              "TUNE_KEYS": 16_000, "TUNE_SCANS": 512,
+              "TUNE_FPR_PROBES": 2_000},
 }
 
 

@@ -41,6 +41,13 @@ a degraded-scan drill that corrupts one run's filter block and requires
 the quarantined (fence-only) scan results to match an uncorrupted
 control exactly.
 
+The ``store/tune/{static,adaptive}`` rows are the §16 self-tuning twin:
+the identical zipf + correlated-near-miss scan stream through a static
+store and a ``tuning="adaptive"`` one.  The adaptive store samples the
+warm-phase scans, re-solves its layout at class-graduating compactions,
+and must land at a strictly lower observed FPR on ground-truth-empty
+ranges at equal bits per key (both CI-gated, plus retune-count >= 1).
+
 The ``store/churn/*`` rows measure filters under deletion churn
 (DESIGN.md §12): load, measure the absent-key FPR, run a 50/50
 put/delete phase over the same seeded op stream, re-measure.
@@ -84,6 +91,9 @@ NEAR_MISS = 0.2      # share of scans starting just past a stored key
 DISTS = ("uniform", "zipf", "float")
 BACKENDS = ("bloomrf", "none", "prefix_bloom", "rosetta")
 FLOAT_BACKENDS = ("bloomrf", "none")
+TUNE_KEYS = 60_000   # tuner-twin load-phase keys (zipf-clustered)
+TUNE_SCANS = 2_048   # short scans the tuner observes before compacting
+TUNE_FPR_PROBES = 4_000   # ground-truth-empty ranges for observed FPR
 CHURN_OPS = 40_000   # churn-phase op count
 CHURN_DELETE_FRAC = 0.6   # delete-heavy churn (the FPR-drift stressor)
 CHURN_PURGE_DEAD = 0.15   # deletable: dead fraction forcing a purge rebuild
@@ -339,6 +349,76 @@ def run_churn_one(mutability: str, seed: int = 0x57043) -> tuple:
     return handle, m
 
 
+def run_tune_one(tuning: str, seed: int = 0x57043) -> tuple:
+    """(typed store handle, tune metrics): the §16 static-vs-adaptive twin.
+
+    Both twins see the identical seeded op stream: load half the
+    zipf-clustered keys, run the short-scan warm phase (zipf + correlated
+    near misses — the workload the adaptive tuner samples), then load the
+    rest so compactions graduate capacity classes (the retune point).
+    ``observed_fpr`` re-probes ground-truth-empty ranges drawn from the
+    *same* scan-start distribution through the run filters, so the
+    adaptive row measures exactly what the tuner optimised for at equal
+    bits per key; ``us_per_op`` times the post-retune scan phase."""
+    rng = np.random.default_rng(seed ^ 0x7E4E)
+    handle = open_filter(FilterSpec(
+        dtype="u32", placement="store", memtable_limit=MEMTABLE,
+        level0_runs=LEVEL0, fanout=FANOUT, bits_per_key=BPK, delta=6,
+        tuning="adaptive" if tuning == "adaptive" else "auto"))
+    data = _keys(TUNE_KEYS, "zipf", rng)
+    half = len(data) // 2
+    for i, k in enumerate(data[:half]):
+        handle.put(int(k), i)
+    handle.flush()
+    # warm phase: the scans the tuner observes (and everyone answers)
+    n_scans = max(TUNE_SCANS // SCAN_BATCH, 1) * SCAN_BATCH
+    lo = _scan_starts(n_scans, "zipf", data[:half], rng)
+    hi = _scan_bounds(lo, "zipf")
+    for s in range(0, n_scans, SCAN_BATCH):
+        handle.scan_many(lo[s:s + SCAN_BATCH], hi[s:s + SCAN_BATCH])
+    # second load half: compactions fire -> class-graduating rebuilds
+    # consult the solver and land in the tuned layout
+    for i, k in enumerate(data[half:]):
+        handle.put(int(k), half + i)
+    handle.flush()
+    # observed FPR on ground-truth-empty ranges from the same scan mix
+    plo = _scan_starts(TUNE_FPR_PROBES, "zipf", data, rng)
+    phi = _scan_bounds(plo, "zipf")
+    srt = np.sort(data)
+    idx = np.searchsorted(srt, plo)
+    hit = (idx < len(srt)) & (srt[np.minimum(idx, len(srt) - 1)] <= phi)
+    plo, phi = plo[~hit], phi[~hit]
+    fence, filt = handle.store.probe_runs(plo, phi)
+    observed_fpr = float((fence & filt).any(axis=1).mean())
+    # timed post-retune scan phase (host path; same batching as warm).
+    # One untimed batch first: the retuned stack's layouts are new to the
+    # probe cache, and the static twin must not win on compile time alone.
+    handle.scan_many(lo[:SCAN_BATCH], hi[:SCAN_BATCH])
+    t0 = time.perf_counter()
+    for s in range(0, n_scans, SCAN_BATCH):
+        handle.scan_many(lo[s:s + SCAN_BATCH], hi[s:s + SCAN_BATCH])
+    us = (time.perf_counter() - t0) / n_scans * 1e6
+    s = handle.stats
+    rep = handle.retune_report()
+    m = {
+        "observed_fpr": observed_fpr,
+        "empty_probes": int(len(plo)),
+        "retunes": int(rep.get("retunes", 0)),
+        "retune_events": len(rep.get("events", [])),
+        "workload_seen": int(rep.get("workload", {}).get("n_ranges", 0)),
+        "runs_probed_per_scan": s.runs_probed_per_scan,
+        "scan_fp_read_rate": s.scan_fp_read_rate,
+        "runs_live": handle.n_runs,
+        "filter_bits": handle.size_bits(),
+        "us_per_op": us,
+    }
+    if tuning == "adaptive" and rep.get("cross_check"):
+        cc = rep["cross_check"]
+        if cc.get("calibration") is not None:
+            m["calibration"] = float(cc["calibration"])
+    return handle, m
+
+
 def run_recovery(seed: int = 0x57043) -> dict:
     """``store/recovery`` metrics: the WAL write-path tax, reopen time,
     and the degraded-scan correctness drill (DESIGN.md §14).
@@ -508,6 +588,16 @@ def run(section: dict | None = None, metrics_path: str | None = None):
             if section is not None:
                 section[f"{dist}/{backend}"] = m
             rows.append(emit(f"store/{dist}/{backend}", us, detail))
+    for tuning in ("static", "adaptive"):
+        _, m = run_tune_one(tuning)
+        if section is not None:
+            section[f"tune/{tuning}"] = m
+        rows.append(emit(
+            f"store/tune/{tuning}", m["us_per_op"],
+            f"fpr={m['observed_fpr']:.4f};"
+            f"retunes={m['retunes']};"
+            f"runs/scan={m['runs_probed_per_scan']:.3f};"
+            f"bits={m['filter_bits']}"))
     for mutability in CHURN_MUTABILITIES:
         _, m = run_churn_one(mutability)
         if section is not None:

@@ -52,7 +52,7 @@ __all__ = ["FilterSpec", "open_filter", "chunked_probe",
 _DTYPES = ("u8", "u16", "u32", "u64", "f32", "f64", "str", "multiattr")
 _PLACEMENTS = ("single", "bank", "tenant", "store")
 _BACKENDS = ("auto", "xla", "resident", "partitioned", "stacked")
-_TUNINGS = ("auto", "basic", "advised")
+_TUNINGS = ("auto", "basic", "advised", "adaptive")
 _MUTABILITIES = ("insert_only", "deletable", "ttl")
 
 #: range budget (log2) up to which the tuning-free basic layout is advised
@@ -308,6 +308,11 @@ class FilterSpec:
             bad("tuning='advised' builds exact-bitmap layouts, which only "
                 "the single placement's XLA path can probe (the stacked "
                 "plan and the kernels are hashed-layout only)")
+        if self.tuning == "adaptive" \
+                and self.placement not in ("store", "tenant"):
+            bad("tuning='adaptive' fits a workload model from live scans; "
+                "only the store placement (retune at compaction) and the "
+                "tenant placement (retune on promote) sample one")
         if self.mutability not in _MUTABILITIES:
             bad(f"mutability must be one of {_MUTABILITIES}, "
                 f"got {self.mutability!r}")
@@ -721,6 +726,12 @@ class TenantFilter(_Handle):
             _warn=False)
         self.gens = None        # ttl: generation lanes over (state, meta)
         self._fpr_tenants: dict = {}    # per-tenant reservoirs (first <= 8)
+        self._wl_sampler = None         # adaptive: live scan-bounds sample
+        self._promote_events: list = []  # adaptive: advised promotions
+        if spec.tuning == "adaptive":
+            from .obs.fpr import FprSampler
+
+            self._wl_sampler = FprSampler(codec.d, seed=spec.seed ^ 0xAD47)
         self._state = self.bank.init_state()
         self._meta = self.bank.init_meta()
         if spec.mutability == "ttl":
@@ -799,11 +810,33 @@ class TenantFilter(_Handle):
                 "advance_generation() needs FilterSpec(mutability='ttl')")
         self.gens.advance()
 
-    def grow(self, factor: int = 4) -> None:
+    def grow(self, factor: Optional[int] = None) -> None:
         """In-place capacity promotion of every tenant row (and the meta
-        rows, and every TTL generation): segment tiling, no key re-hash."""
+        rows, and every TTL generation): segment tiling, no key re-hash.
+
+        With ``FilterSpec(tuning='adaptive')`` and ``factor=None`` the
+        promotion factor is *advised* from the sampled workload
+        (``TenantFilterBank.advise_promotion``): the cost model prices
+        each candidate factor's promoted layout under the observed
+        range-length mix and the smallest factor that isn't clearly
+        beaten wins.  Without a workload sample (or with static tuning)
+        the default factor is 4."""
         from .core.dynamic import promote_state
 
+        if factor is None:
+            factor = 4
+            if (self._wl_sampler is not None
+                    and self._wl_sampler.workload_seen):
+                from .tune import fit_workload
+
+                wl = fit_workload(self.codec.d, sampler=self._wl_sampler)
+                factor, reports = self.bank.advise_promotion(wl)
+                self._promote_events.append({
+                    "factor": factor,
+                    "workload_seen": self._wl_sampler.workload_seen,
+                    "reports": {f: r.as_dict()
+                                for f, r in reports.items()},
+                })
         old = self.bank
         if self.gens is not None:
             nb = old.grown(factor)
@@ -839,6 +872,9 @@ class TenantFilter(_Handle):
         clo, chi = self.codec.encode_bounds(lo, hi)
         t = self._tiled_tenants(tenants, len(clo))
         self._observe_ranges(clo, chi)
+        if self._wl_sampler is not None:
+            # adaptive tuning samples regardless of the obs-plane flag
+            self._wl_sampler.observe_ranges(clo, chi)
         record_skips = _obs_metrics.enabled() and use_meta
         out = []
         with _obs_trace.span("facade/range", n=len(clo)):
@@ -884,6 +920,18 @@ class TenantFilter(_Handle):
                 reg.gauge(f"obs/fpr/tenant/{tid}").set(r["range_fpr"])
         return out
 
+    def retune_report(self) -> dict:
+        """Workload sample + advised promotions (``tuning='adaptive'``)."""
+        if self._wl_sampler is None:
+            return {"tuning": self.spec.tuning, "promotions": []}
+        from .tune import fit_workload
+
+        return {"tuning": "adaptive",
+                "workload_seen": self._wl_sampler.workload_seen,
+                "promotions": list(self._promote_events),
+                "workload": fit_workload(
+                    self.codec.d, sampler=self._wl_sampler).to_dict()}
+
     def size_bits(self) -> int:
         return self.bank.size_bits()
 
@@ -922,7 +970,9 @@ class TypedStore(_Handle):
             mutability=spec.mutability,
             purge_dead_frac=spec.purge_dead_frac,
             durability=spec.durability,
-            wal_dir=spec.wal_dir), _warn=False)
+            wal_dir=spec.wal_dir,
+            tuning="adaptive" if spec.tuning == "adaptive" else "static"),
+            _warn=False)
         self._buckets = self.codec.name == "str"
 
     # -- write path -------------------------------------------------------
@@ -1059,6 +1109,27 @@ class TypedStore(_Handle):
     def size_bits(self) -> int:
         return self.store.filter_bits()
 
+    def retune_report(self) -> dict:
+        """What the adaptive tuner has seen and done (DESIGN.md §16).
+
+        For ``tuning='adaptive'``: the retune counter (compaction
+        rebuilds that landed in a tuner-advised layout), the solver event
+        log, the fitted ``bloomrf-workload/v1`` model, per-class standing
+        decisions, and a model-vs-live cross-check for the largest live
+        run's layout.  Static stores report ``{'tuning': 'static', ...}``
+        so callers can branch without try/except."""
+        tuner = self.store._tuner
+        if tuner is None:
+            return {"tuning": self.spec.tuning, "retunes": 0, "events": []}
+        out = {"tuning": "adaptive",
+               "retunes": int(self.store.stats.retunes)}
+        out.update(tuner.report())
+        runs = self.store.live_runs()
+        if runs:
+            big = max(runs, key=len)
+            out["cross_check"] = tuner.cross_check(big.layout, len(big))
+        return out
+
     # -- observability (DESIGN.md §15) ------------------------------------
     def register_obs(self, family: str = "store") -> str:
         """Register the store's :class:`StoreStats` as a metric family."""
@@ -1094,6 +1165,10 @@ class TypedStore(_Handle):
             pos = fence & filt
             out["range_fpr"] = float(pos.any(axis=1).mean())
             out["range_fpr_per_run"] = [float(x) for x in pos.mean(axis=0)]
+        if store._tuner is not None:
+            # close the loop: the live sample is the cost model's
+            # cross-check input (tune/cost.cross_check)
+            store._tuner.record_observed(out)
         return self._record_fpr(out)
 
 

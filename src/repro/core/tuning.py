@@ -91,9 +91,27 @@ def _build_candidate(d: int, n: int, m_bits: int, exact_level: int,
 def advise(d: int, n: int, m_bits: int, R: float,
            point_weight: float = 1.0, C: float = 1.0,
            seed: int = 0x0B100F11) -> AdvisorResult:
-    """Select a bloomRF configuration for ranges up to ``R`` within ``m_bits``."""
+    """Select a bloomRF configuration for ranges up to ``R`` within ``m_bits``.
+
+    Raises ``ValueError`` for out-of-range inputs (d outside 1..64,
+    non-positive n or m_bits, R < 1) and when no feasible configuration
+    exists within the memory budget — never a silent bad layout or a
+    deep assertion failure."""
+    if not 1 <= d <= 64:
+        raise ValueError(f"d must be in 1..64 (uint64 key domain), got {d}")
+    if n < 1:
+        raise ValueError(f"n must be >= 1, got {n}")
+    if m_bits < 1:
+        raise ValueError(f"m_bits must be >= 1, got {m_bits}")
+    if not R >= 1:
+        raise ValueError(f"R must be >= 1, got {R}")
     # exact level heuristic: smallest level whose bitmap is < 60% of budget
-    l_e = next(lv for lv in range(d + 1) if 2.0 ** (d - lv) < 0.6 * m_bits)
+    l_e = next((lv for lv in range(d + 1) if 2.0 ** (d - lv) < 0.6 * m_bits),
+               None)
+    if l_e is None:
+        raise ValueError(
+            f"advisor found no feasible exact level for d={d} within "
+            f"m_bits={m_bits}; increase the memory budget")
     l_e = max(1, l_e)
     top_range_lv = min(int(math.ceil(math.log2(max(R, 2.0)))), d)
 

@@ -55,6 +55,7 @@ the stacked reference.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional, Tuple
 
 import jax
@@ -306,6 +307,57 @@ class TenantFilterBank:
             _warn=False,
             _layout=promote_layout(self.bank.layout, factor),
             _meta_layout=promote_layout(self.meta_layout, factor))
+
+    def advise_promotion(self, workload, n_current: Optional[int] = None,
+                         n_target: Optional[int] = None,
+                         factors: Tuple[int, ...] = (2, 4, 8)):
+        """Workload-advised promotion factor (per-tenant retune, §16).
+
+        Prices each candidate factor ``f``'s promoted layout under the
+        sampled workload (``repro.tune.cost``).  Promotion tiles set bits
+        ``f`` times, so a promoted segment's density equals a fresh build
+        over ``f * n_current`` keys; filling the headroom to ``n_target``
+        adds the difference on top — that effective key count is what the
+        §7 model is scored at.  The workload's range lengths are rescaled
+        to the shard-local domain (a scan's per-shard slice is
+        ~``len / n_shards``).  The smallest factor with enough headroom
+        wins unless a larger one at least halves the predicted mixed FPR
+        (memory is ``f``-proportional; doubling it must buy a real win).
+
+        Returns ``(factor, {factor: CostReport})``.
+        """
+        from ..core.dynamic import promote_layout
+        from ..tune.cost import score_layout
+
+        n_current = self.n_keys_per_tenant if n_current is None \
+            else int(n_current)
+        n_target = 2 * n_current if n_target is None else int(n_target)
+        if n_current < 1 or n_target < n_current:
+            raise ValueError(
+                f"need 1 <= n_current <= n_target, got "
+                f"n_current={n_current} n_target={n_target}")
+        wl = workload.rescaled(
+            -int(round(math.log2(self.n_shards)))) if self.n_shards > 1 \
+            else workload
+        reports, best = {}, None
+        for f in sorted(set(int(f) for f in factors)):
+            if f < 2 or self.n_keys_per_tenant * f < n_target:
+                continue        # not enough headroom for the target
+            try:
+                lay = promote_layout(self.bank.layout, f)
+            except ValueError:
+                continue
+            n_eff = f * n_current + (n_target - n_current)
+            reports[f] = score_layout(lay, n_eff, wl)
+            if best is None or \
+                    reports[f].fpr_mix < 0.5 * reports[best].fpr_mix:
+                best = f
+        if best is None:
+            raise ValueError(
+                f"no promotion factor in {factors} reaches "
+                f"n_target={n_target} from {self.n_keys_per_tenant} "
+                f"keys/tenant")
+        return best, reports
 
     def promote(self, state, meta, factor: int = 4
                 ) -> Tuple["TenantFilterBank", jax.Array, jax.Array]:

@@ -28,6 +28,13 @@ from . import metrics as _metrics
 # log2(range length) upper edges, 0..64: the whole dyadic ladder
 LOG2_BUCKETS = tuple(float(b) for b in range(65))
 
+#: the pinned ``sample()`` dict schema: always the first three, the two
+#: FPR fields only when the matching probe ran.  ``bloomrf-workload/v1``
+#: (repro.tune.workload) consumes these by name — additions are fine,
+#: renames/removals are a schema break.
+SAMPLE_FIELDS = ("point_candidates", "range_candidates", "workload_seen",
+                 "point_fpr", "range_fpr")
+
 _SETTLE_AT = 1 << 16        # pending inserted codes before a lazy settle
 
 
@@ -58,6 +65,9 @@ class FprSampler:
         self._cap = reservoir_cap
         self._seen = 0
         self._hist = workload_hist
+        # host copy of the range-length histogram: the tuner's workload
+        # fit must not depend on the (off-by-default) metrics registry
+        self.range_log2_counts = np.zeros(len(LOG2_BUCKETS))
 
     # -- candidate invalidation ------------------------------------------
 
@@ -105,20 +115,33 @@ class FprSampler:
         if lo.size == 0:
             return
         lengths = (hi - lo).astype(np.float64) + 1.0
+        log_len = np.log2(np.maximum(lengths, 1.0))
         _metrics.registry().histogram(self._hist, LOG2_BUCKETS).observe_many(
-            np.log2(np.maximum(lengths, 1.0)))
-        self._seen += lo.size
+            log_len)
+        idx = np.clip(np.ceil(log_len), 0, len(LOG2_BUCKETS) - 1)
+        self.range_log2_counts += np.bincount(
+            idx.astype(np.int64), minlength=len(LOG2_BUCKETS))
         free = self._cap - len(self._reservoir)
         if free > 0:
             take = min(free, lo.size)
             self._reservoir.extend(
                 zip(lo[:take].tolist(), hi[:take].tolist()))
+            self._seen += take
             lo, hi = lo[take:], hi[take:]
         if lo.size:
-            slots = self._rng.integers(0, self._seen, lo.size)
-            for j, a, b in zip(slots, lo.tolist(), hi.tolist()):
-                if j < self._cap:
-                    self._reservoir[j] = (a, b)
+            # exact Algorithm R, vectorized: the i-th item of the batch is
+            # the (seen_i)-th of the stream and replaces a uniform slot of
+            # [0, seen_i) when that slot lands inside the reservoir.  The
+            # draws are independent across items, so batch processing is
+            # distribution-identical to the one-at-a-time loop — each
+            # candidate survives with probability cap/seen, exactly.
+            counts = self._seen + np.arange(1, lo.size + 1)
+            slots = (self._rng.random(lo.size) * counts).astype(np.int64)
+            self._seen += lo.size
+            hit = slots < self._cap
+            for j, a, b in zip(slots[hit].tolist(), lo[hit].tolist(),
+                               hi[hit].tolist()):
+                self._reservoir[j] = (a, b)
 
     def workload_sample(self) -> list[tuple[int, int]]:
         """The reservoir of raw (lo, hi) query bounds (tuner input)."""
@@ -127,6 +150,24 @@ class FprSampler:
     @property
     def workload_seen(self) -> int:
         return self._seen
+
+    def preload_workload(self, bounds, seen: int, log2_counts=None) -> None:
+        """Re-seed the workload sample from a serialized snapshot
+        (``bloomrf-workload/v1`` restore): the reservoir resumes with its
+        prior candidates and stream position, so a reopened tuner does not
+        cold-start through its hysteresis gate again."""
+        bounds = [(int(a), int(b)) for a, b in bounds][: self._cap]
+        if any(a > b for a, b in bounds):
+            raise ValueError("preload_workload: lo > hi in bounds")
+        self._reservoir = bounds
+        self._seen = max(int(seen), len(bounds))
+        if log2_counts is not None:
+            counts = np.asarray(log2_counts, np.float64)
+            if counts.shape != (len(LOG2_BUCKETS),) or (counts < 0).any():
+                raise ValueError(
+                    f"preload_workload: log2_counts must be "
+                    f"{len(LOG2_BUCKETS)} non-negative counts")
+            self.range_log2_counts = counts.copy()
 
     # -- re-probe ---------------------------------------------------------
 

@@ -118,6 +118,11 @@ class StoreConfig:
     value_bytes: int = 64           # per-entry data-block size for accounting
     seed: int = 0x0B100F11
     mutability: str = "insert_only"  # "insert_only" | "deletable"
+    tuning: str = "static"          # "static" (capacity-class ladder only)
+                                    # | "adaptive" — sample the live scan
+                                    # workload and let compaction's
+                                    # class-graduating rebuilds land in a
+                                    # re-solved layout (repro.tune, §16)
     purge_dead_frac: float = 0.25   # deletable: dead fraction forcing a purge
     promote_max_hops: int = 1       # promote hops a filter survives before a
                                     # rebuild is forced (promotion keeps the
@@ -147,6 +152,13 @@ class StoreConfig:
             raise ValueError(
                 f"mutability must be 'insert_only' or 'deletable', "
                 f"got {self.mutability!r}")
+        if self.tuning not in ("static", "adaptive"):
+            raise ValueError(f"tuning must be 'static' or 'adaptive', "
+                             f"got {self.tuning!r}")
+        if self.tuning == "adaptive" and self.filter_backend != "bloomrf":
+            raise ValueError(
+                f"tuning='adaptive' re-solves bloomRF layouts; it needs "
+                f"filter_backend='bloomrf', not {self.filter_backend!r}")
         if not (0.0 < self.purge_dead_frac <= 1.0):
             raise ValueError(
                 f"purge_dead_frac must be in (0, 1], got {self.purge_dead_frac}")
@@ -198,6 +210,9 @@ class StoreStats:
     rebuild_merges: int = 0         # cross-layout merges (key re-insert)
     promote_merges: int = 0         # in-place segment-tiled class promotions
     purge_rebuilds: int = 0         # rebuilds forced by the dead-frac policy
+    retunes: int = 0                # compaction rebuilds that landed in a
+                                    # tuner-advised layout instead of the
+                                    # capacity-class ladder's (§16)
     # point reads
     get_runs_considered: int = 0
     get_fence_skips: int = 0
@@ -228,7 +243,7 @@ class StoreStats:
     # degraded_probes describe THIS process's traffic and stay local.
     DURABLE: ClassVar[Tuple[str, ...]] = (
         "puts", "deletes", "flushes", "compactions", "or_merges",
-        "rebuild_merges", "promote_merges", "purge_rebuilds",
+        "rebuild_merges", "promote_merges", "purge_rebuilds", "retunes",
         "kernel_fallbacks")
 
     @property
@@ -292,6 +307,11 @@ class Store:
         self._dirty = True
         self._wal: Optional[Wal] = None
         self._seq = 0                         # checkpoint sequence number
+        self._tuner = None                    # workload-adaptive tuner (§16)
+        if self.cfg.tuning == "adaptive":
+            from ..tune import AdaptiveTuner
+
+            self._tuner = AdaptiveTuner(self.cfg.d, seed=self.cfg.seed)
         if _obs_metrics.enabled():            # late joiners: register_obs()
             self.register_obs()
         if self.cfg.durability == "wal" and _open_wal:
@@ -355,6 +375,11 @@ class Store:
     def _make_run(self, keys: np.ndarray, vals: list, tombs: np.ndarray,
                   level: int) -> Run:
         layout = self.class_layout(len(keys))
+        if self._tuner is not None:
+            # flushes reuse the class's standing retune decision (no
+            # re-solve here) so fresh runs join the tuned layout and
+            # same-class compactions keep merging with a free OR
+            layout = self._tuner.cached_layout(layout) or layout
         state = alt = None
         if self.cfg.filter_backend == "bloomrf":
             state = self._build_filter(layout, keys)
@@ -470,6 +495,14 @@ class Store:
             self._dirty = True
             return
         target_layout = self.class_layout(len(keys))
+        retuned = False
+        if self._tuner is not None:
+            # THE retune point (§16): a class-graduating merge is already
+            # paying for a rebuild, so consult the solver and re-insert
+            # into the tuned layout instead of the ladder's
+            tuned = self._tuner.advise_layout(target_layout, len(keys))
+            retuned = tuned != target_layout
+            target_layout = tuned
         state = alt = None
         if self.cfg.filter_backend == "bloomrf":
             # fraction of merged entries that did not survive (shadowed
@@ -494,6 +527,11 @@ class Store:
                        "rebuild": "rebuild_merges", "purge": "purge_rebuilds"}
             setattr(self.stats, counter[how],
                     getattr(self.stats, counter[how]) + 1)
+            if retuned and how in ("rebuild", "purge"):
+                # only count retunes that actually re-inserted into the
+                # tuned layout here; an OR over already-tuned sources
+                # means an earlier compaction/flush did the work
+                self.stats.retunes += 1
             promotions = {"or": hops, "promote": hops + 1}.get(how, 0)
         elif self.cfg.filter_backend != "none":
             alt = _baseline_factory(self.cfg.filter_backend)(
@@ -749,6 +787,8 @@ class Store:
     def get_many(self, keys) -> list:
         """Batched point lookups: one fused filter gather for the batch."""
         keys = np.atleast_1d(np.asarray(keys, np.uint64))
+        if self._tuner is not None:
+            self._tuner.observe_points(len(keys))
         with _obs_trace.span("store/get", batch=len(keys)):
             return self._get_many_inner(keys)
 
@@ -795,6 +835,10 @@ class Store:
         fused XLA gather, per ``StoreConfig.scan_backend``."""
         los = np.atleast_1d(np.asarray(los, np.uint64))
         his = np.atleast_1d(np.asarray(his, np.uint64))
+        if self._tuner is not None:
+            # host-side workload sampling (numpy histogram + reservoir);
+            # the device probe dispatch below stays untouched
+            self._tuner.observe_scan(los, his)
         with _obs_trace.span("store/scan", batch=len(los)):
             fence, touch = self._touch_masks(los, his)
             return [self._scan_one(int(lo), int(hi), fence[b], touch[b])
@@ -870,10 +914,15 @@ class Store:
                 f"memtable entries and no WAL: those writes are not in the "
                 f"snapshot and will not survive a restore",
                 RuntimeWarning, stacklevel=2)
-        return {"schema": "bloomrf-store/v3",
+        snap = {"schema": "bloomrf-store/v3",
                 "config": dataclasses.asdict(self.cfg),
                 "stats": self.stats.durable_snapshot(),
                 "levels": [[r.pack() for r in lvl] for lvl in self.levels]}
+        if self._tuner is not None:
+            # the fitted workload model (bloomrf-workload/v1) rides along
+            # so a reopened store resumes tuning from its sample
+            snap["workload"] = self._tuner.to_dict()
+        return snap
 
     @classmethod
     def restore(cls, snap: dict) -> "Store":
@@ -925,6 +974,21 @@ class Store:
                     "names to non-negative ints")
             for k, v in stats_enc.items():
                 setattr(store.stats, k, v)
+        wl_enc = snap.get("workload")    # optional: adaptive-tuned stores
+        if wl_enc is not None:
+            from ..tune import WorkloadModel
+
+            try:
+                model = WorkloadModel.from_dict(wl_enc)
+            except ValueError as e:
+                raise ValueError(
+                    f"store snapshot: bad workload model: {e}") from e
+            if store._tuner is not None:
+                if model.d != store.cfg.d:
+                    raise ValueError(
+                        f"store snapshot: workload model d={model.d} does "
+                        f"not match config d={store.cfg.d}")
+                store._tuner.load(wl_enc)
         store._dirty = True
         return store
 
